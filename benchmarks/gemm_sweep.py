@@ -1,0 +1,52 @@
+"""Pallas GEMM kernel sweep: wall-time (interpret mode) + modeled device
+occupancy for each tile configuration. One row per (shape, block).
+
+Run: PYTHONPATH=src:. python -m benchmarks.gemm_sweep
+(interpret mode is a correctness vehicle; timings are CPU-emulation times,
+the modeled columns are the TPU-target numbers.)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E, gemm_cost
+from repro.kernels import ops, ref
+
+SHAPES = ((256, 256, 256), (512, 512, 256), (1024, 512, 512))
+BLOCKS = ((128, 128, 128), (64, 64, 64), (128, 64, 256))
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    print("m,n,k,block,us_per_call_interp,max_err,modeled_tpu_us,mxu_util")
+    for m, n, k in SHAPES:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        want = np.asarray(ref.gemm_ref(a, b))
+        for blk in BLOCKS:
+            f = lambda: ops.gemm(a, b, block=blk, interpret=True)
+            out = f()
+            err = float(np.max(np.abs(np.asarray(out) - want)))
+            t0 = time.perf_counter()
+            f().block_until_ready()
+            dt = (time.perf_counter() - t0) * 1e6
+            c = gemm_cost(m, n, k, 4)
+            modeled = c.flops / TPU_V5E.dev_flops * 1e6
+            # MXU utilisation of the tile geometry (edge padding waste)
+            bm, bn, bk = blk
+            pads = (
+                (m + (-m) % bm) * (n + (-n) % bn) * (k + (-k) % bk)
+            ) / (m * n * k)
+            print(
+                f"{m},{n},{k},{bm}x{bn}x{bk},{dt:.0f},{err:.2e},"
+                f"{modeled:.2f},{1/pads:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""TPU-native offload crossover: the paper's size-dependent decision with
+v5e constants, plus the resident-weights (zero-copy) regime.
+
+Run: PYTHONPATH=src:. python -m benchmarks.offload_crossover
+"""
+
+from __future__ import annotations
+
+from repro.core import TPU_V5E, breakdown, crossover_size, gemm_cost
+
+BF16 = 2
+
+
+def main() -> None:
+    print("n,speedup_staged,speedup_resident,offload_staged,offload_resident")
+    for n in (64, 128, 256, 512, 1024, 2048, 4096, 8192):
+        c = gemm_cost(n, n, n, BF16)
+        staged = breakdown(c, TPU_V5E)
+        resident = breakdown(c, TPU_V5E, resident_fraction=1.0)
+        print(
+            f"{n},{staged.speedup:.2f},{resident.speedup:.2f},"
+            f"{staged.speedup >= 1.0},{resident.speedup >= 1.0}"
+        )
+    print()
+    print("crossover (staged, bf16):", crossover_size(TPU_V5E, BF16))
+    print(
+        "crossover (resident — the paper's IOMMU end-state):",
+        crossover_size(TPU_V5E, BF16, zero_copy=True),
+    )
+
+
+if __name__ == "__main__":
+    main()

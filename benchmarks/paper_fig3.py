@@ -1,0 +1,68 @@
+"""Reproduce the paper's Figure 3: float64 GEMM runtime, host vs offload,
+decomposed into the three regions, for n in {16, 32, 64, 128}.
+
+Run: PYTHONPATH=src:. python -m benchmarks.paper_fig3
+"""
+
+from __future__ import annotations
+
+from repro.core import HESOC_VCU128, breakdown, gemm_cost
+
+SIZES = (16, 32, 64, 128)
+F64 = 8
+
+
+def rows():
+    out = []
+    for n in SIZES:
+        c = gemm_cost(n, n, n, F64)
+        bd = breakdown(c, HESOC_VCU128)
+        bz = breakdown(c, HESOC_VCU128, zero_copy=True)
+        out.append(
+            {
+                "n": n,
+                "host_ms": bd.host_s * 1e3,
+                "copy_ms": bd.copy_s * 1e3,
+                "fork_join_ms": bd.fork_join_s * 1e3,
+                "compute_ms": bd.compute_s * 1e3,
+                "offload_ms": bd.offload_s * 1e3,
+                "speedup": bd.speedup,
+                "zero_copy_speedup": bz.speedup,
+            }
+        )
+    return out
+
+
+def ascii_figure(rows_) -> str:
+    """Stacked-bar rendition of Figure 3 (host vs offload per size)."""
+    lines = ["Figure 3 reproduction — float64 GEMM on CVA6+Snitch (modeled)", ""]
+    scale = max(r["host_ms"] for r in rows_) / 60.0
+    for r in rows_:
+        host = int(r["host_ms"] / scale)
+        copy = max(int(r["copy_ms"] / scale), 1)
+        fork = max(int(r["fork_join_ms"] / scale), 1)
+        comp = max(int(r["compute_ms"] / scale), 1)
+        lines.append(f"n={r['n']:<4d} host    |{'H' * host} {r['host_ms']:.1f} ms")
+        lines.append(
+            f"      offload |{'C' * copy}{'F' * fork}{'X' * comp} "
+            f"{r['offload_ms']:.1f} ms  (copy/fork-join/compute)  "
+            f"speedup {r['speedup']:.2f}x"
+        )
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rws = rows()
+    print(ascii_figure(rws))
+    print("n,host_ms,copy_ms,fork_join_ms,compute_ms,offload_ms,speedup,zero_copy_speedup")
+    for r in rws:
+        print(
+            f"{r['n']},{r['host_ms']:.3f},{r['copy_ms']:.3f},{r['fork_join_ms']:.3f},"
+            f"{r['compute_ms']:.3f},{r['offload_ms']:.3f},{r['speedup']:.3f},"
+            f"{r['zero_copy_speedup']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark runner — one section per paper table/figure + framework tables.
+
+Prints ``name,us_per_call,derived`` CSV blocks per section.
+Run: PYTHONPATH=src:. python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title: str) -> None:
+    print(f"\n### {title}", flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+
+    _section("paper_fig3 — Figure 3 reproduction (heSoC platform model)")
+    from benchmarks import paper_fig3
+
+    paper_fig3.main()
+
+    _section("offload_crossover — TPU-native offload decision")
+    from benchmarks import offload_crossover
+
+    offload_crossover.main()
+
+    _section("gemm_sweep — Pallas GEMM kernel (interpret) vs oracle")
+    from benchmarks import gemm_sweep
+
+    gemm_sweep.main()
+
+    _section("roofline_table — per-cell roofline terms (from dry-run artifacts)")
+    from pathlib import Path
+
+    from benchmarks import roofline_table
+
+    root = Path("artifacts/dryrun_opt")
+    if not root.exists():
+        root = Path("artifacts/dryrun")
+    if root.exists():
+        cells = roofline_table.load_cells(root, "pod16x16")
+        print(roofline_table.markdown(roofline_table.rows(cells), "pod16x16"))
+    else:
+        print("(no dry-run artifacts found — run `python -m repro.launch.dryrun --all`)")
+
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's Figure-3 experiment as a runnable script: sweep GEMM sizes
+on the modeled heSoC, print region breakdowns and the crossover, then show
+what a whole transformer forward pass looks like through the same lens.
+
+Run: PYTHONPATH=src python examples/offload_breakdown.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import (
+    HESOC_VCU128,
+    breakdown,
+    engine,
+    gemm_cost,
+    offload_policy,
+    offload_trace,
+)
+from repro.models import build_model
+
+
+def gemm_sweep() -> None:
+    print("float64 GEMM on the paper's heSoC (modeled):")
+    print(f"{'n':>6} {'host ms':>9} {'offload ms':>11} {'copy%':>6} {'speedup':>8}")
+    for n in (16, 32, 64, 128, 256, 512):
+        bd = breakdown(gemm_cost(n, n, n, 8), HESOC_VCU128)
+        print(
+            f"{n:>6} {bd.host_s*1e3:>9.1f} {bd.offload_s*1e3:>11.1f} "
+            f"{bd.copy_fraction:>6.0%} {bd.speedup:>8.2f}x"
+        )
+
+
+def model_breakdown() -> None:
+    cfg = get_arch("yi-6b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32)}
+    engine().reset()
+    with offload_policy(mode="auto", platform="tpu-v5e", resident_fraction=1.0):
+        with offload_trace() as t:
+            model.forward(params, batch)
+    print("\nwhole-model forward through the seam (yi-6b reduced):")
+    print(t.summary())
+    print("per-op:")
+    for op, d in sorted(t.by_op().items()):
+        print(f"  {op:14s} calls={d['calls']:3d} offloaded={d['offloaded']:3d} "
+              f"flops={d['flops']:.3e}")
+
+
+if __name__ == "__main__":
+    gemm_sweep()
+    model_breakdown()

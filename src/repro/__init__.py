@@ -1,0 +1,16 @@
+"""repro — heterogeneous BLAS-offload substrate for JAX/TPU.
+
+Reproduction + framework-scale extension of:
+  "Work-In-Progress: Accelerating Numpy With OpenBLAS For Open-Source
+   RISC-V Chips" (ETH Zurich / UniBo, 2025).
+
+Public surface:
+  repro.core      — BLAS seam, offload engine, cost model, accounting
+  repro.kernels   — Pallas TPU device kernels (+ jnp oracles)
+  repro.models    — composable model zoo (all matmuls through the seam)
+  repro.configs   — assigned architecture configs
+  repro.sharding  — logical-axis partitioning rules
+  repro.launch    — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+"""repro.checkpoint — atomic, mesh-agnostic checkpointing."""
+
+from repro.checkpoint.checkpointer import Checkpointer, restore_pytree, save_pytree
+
+__all__ = ["Checkpointer", "restore_pytree", "save_pytree"]

@@ -1,0 +1,26 @@
+"""repro.configs — assigned architecture configs + registry."""
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ArchConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+from repro.configs.registry import get_arch, list_archs
+
+__all__ = [
+    "ALL_SHAPES",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "TRAIN_4K",
+    "ArchConfig",
+    "ShapeConfig",
+    "shape_applicable",
+    "get_arch",
+    "list_archs",
+]

@@ -1,0 +1,50 @@
+"""repro.core — the paper's contribution: a heterogeneous BLAS offload seam.
+
+Layers (mirroring the paper's Fig. 2):
+  platform    — analytic hardware models (heSoC from the paper, TPU v5e)
+  cost_model  — three-region offload cost model (copy / fork-join / compute)
+  hero        — offload engine: residency ledger, policy, launch records
+  blas        — the BLAS API every model layer calls
+  accounting  — per-call offload trace (the paper's Fig. 3 instrumentation)
+"""
+
+from repro.core import blas
+from repro.core.accounting import OffloadRecord, OffloadTrace, offload_trace
+from repro.core.cost_model import (
+    OpCost,
+    RegionBreakdown,
+    attention_cost,
+    breakdown,
+    crossover_size,
+    decide_offload,
+    gemm_cost,
+    gemv_cost,
+    syrk_cost,
+)
+from repro.core.hero import HeroEngine, OffloadPolicy, engine, offload_policy
+from repro.core.platform import CPU_HOST, HESOC_VCU128, TPU_V5E, Platform, get_platform
+
+__all__ = [
+    "blas",
+    "OffloadRecord",
+    "OffloadTrace",
+    "offload_trace",
+    "OpCost",
+    "RegionBreakdown",
+    "attention_cost",
+    "breakdown",
+    "crossover_size",
+    "decide_offload",
+    "gemm_cost",
+    "gemv_cost",
+    "syrk_cost",
+    "HeroEngine",
+    "OffloadPolicy",
+    "engine",
+    "offload_policy",
+    "CPU_HOST",
+    "HESOC_VCU128",
+    "TPU_V5E",
+    "Platform",
+    "get_platform",
+]

@@ -1,0 +1,154 @@
+"""Offload accounting — the paper's three-region runtime instrumentation.
+
+The paper measures each offloaded call as ``data copy`` / ``fork-join`` /
+``compute`` regions.  We reproduce that bookkeeping at the BLAS seam: every
+dispatched call appends an :class:`OffloadRecord` carrying the op, static
+shapes, chosen backend, and the modeled region breakdown.  Recording happens
+at trace time (shapes are static), so the trace is available both for eager
+NumPy-style use and for jitted training steps.
+
+Usage::
+
+    with offload_trace() as trace:
+        y = blas.gemm(a, b)
+    print(trace.summary())
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core.cost_model import OpCost, RegionBreakdown
+
+__all__ = [
+    "OffloadRecord",
+    "OffloadTrace",
+    "offload_trace",
+    "current_trace",
+    "scaled",
+    "current_scale",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadRecord:
+    op: str
+    shape_key: str
+    dtype: str
+    backend: str                # "host" | "device" | "device-pallas"
+    cost: OpCost
+    regions: RegionBreakdown
+    zero_copy: bool
+    note: str = ""
+    # Structural multiplier: a record captured inside a lax.scan body is
+    # traced once but executes `count` times (layer stacks, microbatches,
+    # kv chunks).  Aggregations weight by this.
+    count: float = 1.0
+
+
+class OffloadTrace:
+    """Accumulates records for one traced region of the application."""
+
+    def __init__(self) -> None:
+        self.records: List[OffloadRecord] = []
+
+    def add(self, rec: OffloadRecord) -> None:
+        self.records.append(rec)
+
+    # ---- aggregation ----------------------------------------------------
+    def totals(self) -> Tuple[float, float, float, float]:
+        """(copy_s, fork_join_s, compute_s, host_only_s) over offloaded calls."""
+        copy = fork = comp = host = 0.0
+        for r in self.records:
+            if r.backend.startswith("device"):
+                copy += r.regions.copy_s * r.count
+                fork += r.regions.fork_join_s * r.count
+                comp += r.regions.compute_s * r.count
+            host += r.regions.host_s * r.count
+        return copy, fork, comp, host
+
+    def offloaded(self) -> List[OffloadRecord]:
+        return [r for r in self.records if r.backend.startswith("device")]
+
+    def host_only(self) -> List[OffloadRecord]:
+        return [r for r in self.records if not r.backend.startswith("device")]
+
+    def total_flops(self) -> float:
+        return sum(r.cost.flops * r.count for r in self.records)
+
+    def total_touched_bytes(self) -> float:
+        """Kernel-ideal device-memory traffic: each op streams its operands
+        and results exactly once (the SPM/VMEM-tiled execution the paper's
+        device kernels implement)."""
+        return sum(r.cost.touched_bytes * r.count for r in self.records)
+
+    def total_staged_bytes(self) -> float:
+        return sum(r.cost.staged_bytes * r.count for r in self.offloaded())
+
+    def summary(self) -> str:
+        copy, fork, comp, host = self.totals()
+        off = copy + fork + comp
+        lines = [
+            f"offload trace: {len(self.records)} calls "
+            f"({len(self.offloaded())} offloaded, {len(self.host_only())} host)",
+            f"  regions  copy={copy:.6f}s  fork/join={fork:.6f}s  compute={comp:.6f}s",
+            f"  offload total={off:.6f}s   host-only equivalent={host:.6f}s",
+        ]
+        if off > 0:
+            lines.append(
+                f"  modeled speedup={host / off:.2f}x   copy fraction={copy / off:.1%}"
+            )
+        return "\n".join(lines)
+
+    def by_op(self) -> dict:
+        agg: dict = {}
+        for r in self.records:
+            d = agg.setdefault(r.op, {"calls": 0, "flops": 0.0, "offloaded": 0})
+            d["calls"] += 1
+            d["flops"] += r.cost.flops
+            d["offloaded"] += int(r.backend.startswith("device"))
+        return agg
+
+
+# Module-level stacks (single-threaded tracing; matches JAX's own model).
+_TRACE_STACK: List[OffloadTrace] = []
+_SCALE_STACK: List[float] = []
+
+
+def current_trace() -> Optional[OffloadTrace]:
+    return _TRACE_STACK[-1] if _TRACE_STACK else None
+
+
+def current_scale() -> float:
+    s = 1.0
+    for m in _SCALE_STACK:
+        s *= m
+    return s
+
+
+@contextlib.contextmanager
+def scaled(mult: float) -> Iterator[None]:
+    """Mark the enclosed trace region as executing ``mult`` times (scan body)."""
+    _SCALE_STACK.append(float(mult))
+    try:
+        yield
+    finally:
+        _SCALE_STACK.pop()
+
+
+@contextlib.contextmanager
+def offload_trace() -> Iterator[OffloadTrace]:
+    t = OffloadTrace()
+    _TRACE_STACK.append(t)
+    try:
+        yield t
+    finally:
+        _TRACE_STACK.pop()
+
+
+def record(rec: OffloadRecord) -> None:
+    t = current_trace()
+    if t is not None:
+        t.add(dataclasses.replace(rec, count=current_scale()))

@@ -1,0 +1,518 @@
+"""The BLAS seam — OpenBLAS analogue (paper Fig. 2, box 3).
+
+One stable linear-algebra API that *all* higher layers call instead of raw
+``jnp`` contractions.  Each call is scored by the cost model, routed by the
+:class:`~repro.core.hero.HeroEngine` (host / device / device-pallas), and
+recorded on the active offload trace — exactly the role OpenBLAS plays in the
+paper, with the OpenMP ``#pragma omp target`` replaced by backend dispatch.
+
+Host path    : ``lax.dot_general`` (XLA default lowering — the "rv64g host
+               kernel").
+Device path  : same graph, but accounted as an offload with the three-region
+               breakdown (on a real TPU, host/device is a residency and
+               lowering distinction, not a different chip).
+Pallas path  : hand-tiled MXU kernels from ``repro.kernels`` (the "rv32 PMCA
+               kernel"), selected when the policy enables them and the shape
+               is tile-eligible.
+
+``syrk`` is host-only by default, mirroring the paper compiling ``syrk.c``
+only for the host.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import accounting
+from repro.core import cost_model as cm
+from repro.core.hero import engine
+
+__all__ = [
+    "gemm",
+    "matmul",
+    "gemm_batched",
+    "linear",
+    "attention",
+    "syrk",
+    "gemv",
+    "dot",
+    "axpy",
+    "scal",
+    "nrm2",
+]
+
+# Ops never offloaded to the Pallas path (paper keeps syrk host-only).
+HOST_ONLY_OPS = frozenset({"syrk"})
+
+_MXU_ALIGN = 128
+# Host attention: direct masked einsum up to this kv length, chunked
+# online-softmax scan beyond it (keeps memory linear in Skv).
+_DIRECT_ATTN_MAX_KV = 8192
+_CHUNKED_ATTN_BLOCK = 1024
+
+
+def _shape_key(*arrs) -> str:
+    return ";".join("x".join(map(str, a.shape)) + f":{a.dtype}" for a in arrs)
+
+
+def _pallas_gemm_eligible(m: int, n: int, k: int, dtype) -> bool:
+    """Tile-eligibility for the hand-written MXU GEMM kernel."""
+    if dtype not in (jnp.float32, jnp.bfloat16):
+        return False
+    # The kernel pads internally; require dims large enough that a 128-tile
+    # working set is meaningful (analogue of "fits the SPM blocking").
+    return min(m, n, k) >= 8
+
+
+def _accum_dot(a, b, dimension_numbers, out_dtype):
+    """Contraction with fp32 accumulation (MXU semantics)."""
+    acc = lax.dot_general(
+        a,
+        b,
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Level-3
+# ---------------------------------------------------------------------------
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """C = op(A) @ op(B) for 2-D operands, routed through the offload seam."""
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"gemm takes 2-D operands, got {a.shape} @ {b.shape}")
+    m, k = (a.shape[1], a.shape[0]) if transpose_a else a.shape
+    kb, n = (b.shape[1], b.shape[0]) if transpose_b else b.shape
+    if k != kb:
+        raise ValueError(f"gemm contraction mismatch: {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    itemsize = jnp.dtype(a.dtype).itemsize
+
+    cost = cm.gemm_cost(m, n, k, itemsize)
+    backend = engine().launch(
+        cost,
+        dtype=str(a.dtype),
+        shape_key=_shape_key(a, b),
+        pallas_eligible=_pallas_gemm_eligible(m, n, k, a.dtype),
+    )
+    if backend == "device-pallas":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        aa = a.T if transpose_a else a
+        bb = b.T if transpose_b else b
+        return kops.gemm(
+            aa, bb, out_dtype=out_dtype, interpret=engine().policy.interpret
+        )
+    ca = ((0,) if transpose_a else (1,), (1,) if transpose_b else (0,))
+    return _accum_dot(a, b, (ca, ((), ())), out_dtype)
+
+
+def _tp_shard_map_matmul(x, w, mode: str, out_dtype):
+    """Explicit tensor-parallel matmul with bf16 cross-device reductions.
+
+    GSPMD places the TP all-reduce on the fp32 dot product (before the bf16
+    cast), doubling wire bytes.  Under shard_map the seam does: local matmul
+    with fp32 accumulation -> cast -> psum in the output dtype.  ``row``:
+    w's first (contracting) dim is model-sharded, psum in forward; ``col``:
+    w's last dim is model-sharded, the (autodiff-generated) psum of dX in
+    backward is bf16 for free because the local primal is already cast.
+    Returns None if the ambient mesh / shapes don't apply.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.annotate import _ambient_mesh
+
+    mesh = _ambient_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    if x.ndim != 3:
+        return None
+    n_model = mesh.shape["model"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    import numpy as _np
+
+    n_dp = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    b = x.shape[0]
+    if b % n_dp or n_model <= 1:
+        return None
+    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
+    if mode == "row":
+        if w.shape[0] % n_model or x.shape[-1] != w.shape[0]:
+            return None
+
+        def local(xl, wl):
+            y = lax.dot_general(
+                xl, wl, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).astype(out_dtype)
+            return lax.psum(y, "model")
+
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(dp, None, "model"), P("model", None)),
+            out_specs=P(dp, None, None),
+            check_rep=False,
+        )(x, w)
+    # col: output dim sharded; bwd dX psum happens in out_dtype
+    if w.shape[1] % n_model or x.shape[-1] != w.shape[0]:
+        return None
+
+    def local_col(xl, wl):
+        return lax.dot_general(
+            xl, wl, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(out_dtype)
+
+    return shard_map(
+        local_col,
+        mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, "model")),
+        out_specs=P(dp, None, "model"),
+        check_rep=False,
+    )(x, w)
+
+
+def matmul(
+    x: jax.Array, w: jax.Array, *, out_dtype=None, tp_mode: Optional[str] = None
+) -> jax.Array:
+    """General (leading-batch, k) @ (k, n) — the framework's workhorse.
+
+    Collapses leading dims into the GEMM ``m`` dimension, exactly how a BLAS
+    binding flattens a NumPy ``ndarray @ matrix``.  ``tp_mode`` ("row"/"col")
+    opts into the explicit tensor-parallel path with bf16 reductions when an
+    ambient mesh allows it (§Perf hillclimb #2).
+    """
+    if w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D rhs, got {w.shape}")
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"matmul contraction mismatch: {x.shape} @ {w.shape}")
+    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    k, n = w.shape
+    itemsize = jnp.dtype(x.dtype).itemsize
+
+    cost = cm.gemm_cost(m, n, k, itemsize)
+    backend = engine().launch(
+        cost,
+        dtype=str(x.dtype),
+        shape_key=_shape_key(x, w),
+        pallas_eligible=_pallas_gemm_eligible(m, n, k, x.dtype),
+    )
+    if tp_mode in ("row", "col"):
+        y = _tp_shard_map_matmul(x, w, tp_mode, out_dtype)
+        if y is not None:
+            return y
+    if backend == "device-pallas":
+        from repro.kernels import ops as kops
+
+        x2 = x.reshape(m, k)
+        out = kops.gemm(
+            x2, w, out_dtype=out_dtype, interpret=engine().policy.interpret
+        )
+        return out.reshape(*x.shape[:-1], n)
+    return _accum_dot(x, w, (((x.ndim - 1,), (0,)), ((), ())), out_dtype)
+
+
+def gemm_batched(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=None,
+) -> jax.Array:
+    """(B, m, k) @ (B, k, n) batched GEMM (attention scores/values)."""
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"gemm_batched: bad shapes {a.shape} @ {b.shape}")
+    bsz, m, k = a.shape
+    _, kb, n = b.shape
+    if k != kb:
+        raise ValueError(f"gemm_batched contraction mismatch: {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    itemsize = jnp.dtype(a.dtype).itemsize
+
+    cost = cm.gemm_cost(m, n, k, itemsize, batch=bsz, op="gemm_batched")
+    backend = engine().launch(
+        cost,
+        dtype=str(a.dtype),
+        shape_key=_shape_key(a, b),
+        pallas_eligible=_pallas_gemm_eligible(m, n, k, a.dtype),
+    )
+    if backend == "device-pallas":
+        from repro.kernels import ops as kops
+
+        return kops.gemm_batched(
+            a, b, out_dtype=out_dtype, interpret=engine().policy.interpret
+        )
+    return _accum_dot(a, b, (((2,), (1,)), ((0,), (0,))), out_dtype)
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    out_dtype=None,
+    tp_mode: Optional[str] = None,
+) -> jax.Array:
+    """y = x @ w (+ b) — convenience wrapper used by every model layer."""
+    y = matmul(x, w, out_dtype=out_dtype, tp_mode=tp_mode)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def expert_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """(E, ..., d) @ (E, d, f) -> (E, ..., f) — expert-batched contraction.
+
+    Keeps all free dims intact (no reshape): merging a sharded dim in a
+    reshape forces GSPMD to all-gather, so MoE keeps its (E, G, C, d)
+    layout 4-D through the expert GEMMs."""
+    if w.ndim != 3 or x.shape[0] != w.shape[0] or x.shape[-1] != w.shape[1]:
+        raise ValueError(f"expert_matmul: bad shapes {x.shape} @ {w.shape}")
+    e = x.shape[0]
+    m = 1
+    for dim in x.shape[1:-1]:
+        m *= dim
+    k, n = w.shape[1], w.shape[2]
+    itemsize = jnp.dtype(x.dtype).itemsize
+    cost = cm.gemm_cost(m, n, k, itemsize, batch=e, op="moe_gemm")
+    backend = engine().launch(
+        cost,
+        dtype=str(x.dtype),
+        shape_key=_shape_key(x, w),
+        pallas_eligible=_pallas_gemm_eligible(m, n, k, x.dtype),
+    )
+    if backend == "device-pallas":
+        from repro.kernels import ops as kops
+
+        x3 = x.reshape(e, m, k)
+        out = kops.moe_gemm(
+            x3, w, out_dtype=out_dtype or x.dtype,
+            interpret=engine().policy.interpret,
+        )
+        return out.reshape(*x.shape[:-1], n)
+    return _accum_dot(
+        x, w, (((x.ndim - 1,), (1,)), ((0,), (0,))),
+        out_dtype or jnp.result_type(x.dtype, w.dtype),
+    )
+
+
+def syrk(a: jax.Array, *, out_dtype=None) -> jax.Array:
+    """C = A @ A.T — host-only, as in the paper's build."""
+    if a.ndim != 2:
+        raise ValueError(f"syrk takes a 2-D operand, got {a.shape}")
+    n, k = a.shape
+    out_dtype = out_dtype or a.dtype
+    cost = cm.syrk_cost(n, k, jnp.dtype(a.dtype).itemsize)
+    engine().launch(
+        cost,
+        dtype=str(a.dtype),
+        shape_key=_shape_key(a),
+        pallas_eligible=False,
+        force_host=True,
+        note="host-only (syrk.c compiled for host, per paper)",
+    )
+    return _accum_dot(a, a, (((1,), (1,)), ((), ())), out_dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    sm_scale: Optional[float] = None,
+    kv_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Fused attention through the offload seam.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  ``window`` may be a static int
+    or a *traced scalar* (per-layer local/global patterns scanned as data);
+    the Pallas flash kernel requires a static window, so traced windows fall
+    back to the masked-einsum host path (still fully shardable).
+    Queries align to the end of kv when Sq < Skv (decode / suffix).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    static_window = window if (window is None or isinstance(window, int)) else None
+    itemsize = jnp.dtype(q.dtype).itemsize
+    cost = cm.attention_cost(
+        b, sq, skv, hq, d, itemsize,
+        window=static_window if static_window and static_window < skv else None,
+    )
+    backend = engine().launch(
+        cost,
+        dtype=str(q.dtype),
+        shape_key=_shape_key(q, k),
+        pallas_eligible=(
+            static_window is not None or window is None
+        ) and kv_mask is None and d >= 8 and q.dtype in (jnp.float32, jnp.bfloat16),
+    )
+    if (
+        backend == "device-pallas"
+        and (window is None or isinstance(window, int))
+        and kv_mask is None
+    ):
+        from repro.kernels import ops as kops
+
+        eff_window = None if (window is None or window >= skv) else window
+        return kops.flash_attention(
+            q, k, v,
+            causal=causal,
+            window=eff_window,
+            sm_scale=sm_scale,
+            interpret=engine().policy.interpret,
+        )
+    # Host path (shardable, GQA-aware, fp32 softmax). Short kv: one masked
+    # einsum. Long kv: chunked online-softmax scan over kv blocks, so the
+    # (Sq, Skv) score matrix is never materialized (pure-JAX flash attention
+    # — the same VMEM discipline the Pallas kernel encodes, one level up).
+    return attention_math(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        kv_mask=kv_mask,
+    )
+
+
+def attention_math(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    sm_scale: Optional[float] = None,
+    kv_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Raw masked/online-softmax attention math (no dispatch/accounting).
+
+    Used by the host path of :func:`attention` and, per-shard, by the
+    tensor-parallel attention block (each device runs it on its local q
+    heads)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    group = hq // hkv
+    # GQA via kv-repeat to q heads: attention then partitions on the q-head
+    # dim (sharded over `model`); a (hkv, group) reshape of a sharded head
+    # dim is not expressible as a PartitionSpec and forces an all-gather.
+    qf = q.astype(jnp.float32)
+    kf = (jnp.repeat(k, group, axis=1) if group > 1 else k).astype(jnp.float32)
+    vf = (jnp.repeat(v, group, axis=1) if group > 1 else v).astype(jnp.float32)
+
+    def mask_for(q_pos, kv_pos):
+        m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, kv_pos.shape), jnp.bool_)
+        if causal:
+            m = jnp.logical_and(m, kv_pos <= q_pos)
+        if window is not None:
+            w = jnp.asarray(window, jnp.int32)
+            m = jnp.logical_and(m, (q_pos - kv_pos) < w)
+        return m
+
+    if skv <= _DIRECT_ATTN_MAX_KV or sq == 1:
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+        q_pos = (skv - sq) + lax.broadcasted_iota(jnp.int32, (sq, skv), 0)
+        kv_pos = lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+        s = jnp.where(mask_for(q_pos, kv_pos)[None, None], s, -1e30)
+        if kv_mask is not None:  # (Skv,) or (B, Skv) slot validity (decode)
+            km = kv_mask if kv_mask.ndim == 2 else kv_mask[None]
+            s = jnp.where(km[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        # fully-masked rows contribute zeros (matches the kernel semantics)
+        p = jnp.where(
+            jnp.max(s, axis=-1, keepdims=True) <= -1e30 * 0.5, 0.0, p
+        )
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+        return out.astype(q.dtype)
+
+    if kv_mask is not None:
+        raise NotImplementedError("kv_mask only supported on the direct path")
+    bkv = min(_CHUNKED_ATTN_BLOCK, skv)
+    while skv % bkv:
+        bkv //= 2
+    assert bkv >= 1
+    nkv = skv // bkv
+    kc = kf.reshape(b, hq, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+    vc = vf.reshape(b, hq, nkv, bkv, d).transpose(2, 0, 1, 3, 4)
+    q_pos = (skv - sq) + lax.broadcasted_iota(jnp.int32, (sq, 1), 0)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, j = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale  # noqa: F841 traced nkv times (scaled at launch above)
+        kv_pos = j * bkv + lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        mask = mask_for(q_pos, kv_pos)  # (sq, bkv)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pj = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(pj, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhqk,bhkd->bhqd", pj, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hq, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq, 1), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m_f, l_f, acc_f), _ = lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(nkv, dtype=jnp.int32))
+    )
+    out = acc_f / jnp.maximum(l_f, 1e-30)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Level-2 / Level-1
+# ---------------------------------------------------------------------------
+
+def gemv(a: jax.Array, x: jax.Array, *, out_dtype=None) -> jax.Array:
+    if a.ndim != 2 or x.ndim != 1 or a.shape[1] != x.shape[0]:
+        raise ValueError(f"gemv: bad shapes {a.shape} @ {x.shape}")
+    m, n = a.shape
+    out_dtype = out_dtype or jnp.result_type(a.dtype, x.dtype)
+    cost = cm.gemv_cost(m, n, jnp.dtype(a.dtype).itemsize)
+    engine().launch(cost, dtype=str(a.dtype), shape_key=_shape_key(a, x))
+    return _accum_dot(a, x, (((1,), (0,)), ((), ())), out_dtype)
+
+
+def dot(x: jax.Array, y: jax.Array) -> jax.Array:
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"dot: bad shapes {x.shape}, {y.shape}")
+    cost = cm.vector_cost("dot", x.shape[0], jnp.dtype(x.dtype).itemsize)
+    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x, y))
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)).astype(x.dtype)
+
+
+def axpy(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
+    cost = cm.vector_cost("axpy", x.size, jnp.dtype(x.dtype).itemsize)
+    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x, y))
+    return alpha * x + y
+
+
+def scal(alpha, x: jax.Array) -> jax.Array:
+    cost = cm.vector_cost("scal", x.size, jnp.dtype(x.dtype).itemsize, 1.0)
+    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x))
+    return alpha * x
+
+
+def nrm2(x: jax.Array) -> jax.Array:
+    cost = cm.vector_cost("nrm2", x.size, jnp.dtype(x.dtype).itemsize)
+    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x))
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)))).astype(x.dtype)

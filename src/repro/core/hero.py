@@ -1,0 +1,238 @@
+"""Offload engine — the HeroSDK analogue (paper Fig. 2, boxes 1-2).
+
+HeroSDK's ``libhero`` boots the PMCA, manages the manually-partitioned device
+DRAM (``hero_allocator.c``) and copies shared structures into it before the
+first offload; the OpenMP target library then launches kernels through it.
+
+On the TPU target the XLA runtime owns physical allocation, so the engine's
+job shifts to what still matters at framework scale:
+
+* a **residency ledger** — which logical buffers (weights, caches) live on
+  device and therefore never pay the ``data copy`` region again.  This is the
+  device-DRAM partition bookkeeping, one level up;
+* **zero-copy mode** — the paper's projected IOMMU path (donated / resident
+  buffers instead of staged copies);
+* **launch records** — every offload goes through :func:`HeroEngine.launch`,
+  which scores it with the cost model and appends to the active trace,
+  reproducing the paper's instrumentation.
+
+The engine is deliberately stateful-but-tiny: it is the seam where a real
+deployment would hang buffer donation, device health checks and retry logic,
+and the fault-tolerance runtime (``repro.runtime``) drives it that way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set
+
+from repro.core import accounting
+from repro.core.cost_model import OpCost, RegionBreakdown, breakdown, decide_offload
+from repro.core.platform import CPU_HOST, Platform, TPU_V5E, get_platform
+
+__all__ = ["HeroEngine", "OffloadPolicy", "engine", "offload_policy"]
+
+
+@dataclasses.dataclass
+class OffloadPolicy:
+    """How the dispatcher routes BLAS calls.
+
+    mode:
+      * ``"host"``   — never offload (paper's host-only baseline)
+      * ``"device"`` — always offload (paper's offloaded run)
+      * ``"auto"``   — offload iff the cost model predicts >= ``min_speedup``
+    """
+
+    mode: str = "auto"
+    zero_copy: bool = False
+    min_speedup: float = 1.0
+    # Fraction of operand bytes assumed device-resident (weights in a
+    # training step are resident; activations are produced on device too, so
+    # inside jit everything is resident and the copy region vanishes — the
+    # paper's IOMMU end-state).
+    resident_fraction: float = 0.0
+    # Prefer hand-written Pallas kernels over plain XLA lowering when legal.
+    use_pallas: bool = False
+    # Run Pallas kernels in interpret mode (CPU validation).
+    interpret: bool = False
+
+    def validate(self) -> None:
+        if self.mode not in ("host", "device", "auto"):
+            raise ValueError(f"bad offload mode {self.mode!r}")
+
+
+class HeroEngine:
+    """Device manager + offload router (singleton per process)."""
+
+    def __init__(self, platform: Platform = TPU_V5E) -> None:
+        self.platform = platform
+        self.policy = OffloadPolicy()
+        self._booted = False
+        self._resident: Set[str] = set()
+        self._l2_image_loaded = False
+
+    # ---- lifecycle (mirrors hero_snitch.c boot / hero_allocator.c) -------
+    def boot(self) -> None:
+        """Analogue of booting the PMCA + copying device functions to L2."""
+        self._booted = True
+        self._l2_image_loaded = True
+
+    def reset(self) -> None:
+        self._booted = False
+        self._l2_image_loaded = False
+        self._resident.clear()
+
+    @property
+    def booted(self) -> bool:
+        return self._booted
+
+    # ---- residency ledger -------------------------------------------------
+    def mark_resident(self, name: str) -> None:
+        """Declare a logical buffer (e.g. 'params', 'kv_cache') device-resident."""
+        self._resident.add(name)
+
+    def evict(self, name: str) -> None:
+        self._resident.discard(name)
+
+    def is_resident(self, name: str) -> bool:
+        return name in self._resident
+
+    # ---- the offload decision + bookkeeping -------------------------------
+    def launch(
+        self,
+        cost: OpCost,
+        *,
+        dtype: str,
+        shape_key: str,
+        pallas_eligible: bool = False,
+        force_host: bool = False,
+        note: str = "",
+    ) -> str:
+        """Route one BLAS call. Returns the chosen backend name.
+
+        Called at trace time from ``repro.core.blas``; side effect is one
+        :class:`accounting.OffloadRecord` on the active trace (if any).
+        """
+        pol = self.policy
+        pol.validate()
+        if force_host:  # ops compiled host-only (paper: syrk.c)
+            bd = breakdown(
+                cost,
+                self.platform,
+                zero_copy=pol.zero_copy,
+                resident_fraction=pol.resident_fraction,
+            )
+            accounting.record(
+                accounting.OffloadRecord(
+                    op=cost.op, shape_key=shape_key, dtype=dtype,
+                    backend="host", cost=cost, regions=bd,
+                    zero_copy=pol.zero_copy, note=note or "host-only op",
+                )
+            )
+            return "host"
+        if pol.mode == "host":
+            offload = False
+            bd = breakdown(
+                cost,
+                self.platform,
+                zero_copy=pol.zero_copy,
+                resident_fraction=pol.resident_fraction,
+            )
+        elif pol.mode == "device":
+            offload = True
+            bd = breakdown(
+                cost,
+                self.platform,
+                zero_copy=pol.zero_copy,
+                resident_fraction=pol.resident_fraction,
+            )
+        else:  # auto — the paper's size-dependent decision
+            offload, bd = decide_offload(
+                cost,
+                self.platform,
+                zero_copy=pol.zero_copy,
+                resident_fraction=pol.resident_fraction,
+                min_speedup=pol.min_speedup,
+            )
+        if offload and not self._booted:
+            self.boot()  # first offload boots the device, as in HeroSDK
+
+        if not offload:
+            backend = "host"
+        elif pallas_eligible and pol.use_pallas:
+            backend = "device-pallas"
+        else:
+            backend = "device"
+        accounting.record(
+            accounting.OffloadRecord(
+                op=cost.op,
+                shape_key=shape_key,
+                dtype=dtype,
+                backend=backend,
+                cost=cost,
+                regions=bd,
+                zero_copy=pol.zero_copy,
+                note=note,
+            )
+        )
+        return backend
+
+
+# Singleton engine — the process's one "device".
+_ENGINE = HeroEngine()
+
+
+def engine() -> HeroEngine:
+    return _ENGINE
+
+
+class offload_policy:
+    """Context manager to scope policy/platform changes.
+
+    ::
+
+        with offload_policy(mode="auto", platform="hesoc-vcu128"):
+            ...
+    """
+
+    def __init__(
+        self,
+        mode: Optional[str] = None,
+        *,
+        platform: Optional[str] = None,
+        zero_copy: Optional[bool] = None,
+        min_speedup: Optional[float] = None,
+        resident_fraction: Optional[float] = None,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+    ) -> None:
+        self._overrides = {
+            k: v
+            for k, v in dict(
+                mode=mode,
+                zero_copy=zero_copy,
+                min_speedup=min_speedup,
+                resident_fraction=resident_fraction,
+                use_pallas=use_pallas,
+                interpret=interpret,
+            ).items()
+            if v is not None
+        }
+        self._platform = get_platform(platform) if platform else None
+        self._saved_policy: Optional[OffloadPolicy] = None
+        self._saved_platform: Optional[Platform] = None
+
+    def __enter__(self) -> HeroEngine:
+        eng = engine()
+        self._saved_policy = dataclasses.replace(eng.policy)
+        self._saved_platform = eng.platform
+        eng.policy = dataclasses.replace(eng.policy, **self._overrides)
+        if self._platform is not None:
+            eng.platform = self._platform
+        return eng
+
+    def __exit__(self, *exc) -> None:
+        eng = engine()
+        assert self._saved_policy is not None
+        eng.policy = self._saved_policy
+        eng.platform = self._saved_platform

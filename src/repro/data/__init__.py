@@ -1,0 +1,5 @@
+"""repro.data — deterministic sharded token pipeline."""
+
+from repro.data.pipeline import MemmapTokens, SyntheticLM, make_batches
+
+__all__ = ["MemmapTokens", "SyntheticLM", "make_batches"]

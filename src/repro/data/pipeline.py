@@ -1,0 +1,94 @@
+"""Deterministic, shardable token data pipeline.
+
+Two sources behind one iterator interface:
+
+  * ``SyntheticLM``   — seeded Zipfian token stream (training smoke/e2e runs
+    need realistic rank-frequency structure, not uniform noise);
+  * ``MemmapTokens``  — flat binary token file (np.memmap), the standard
+    "tokenized corpus on shared storage" layout used by real clusters.
+
+Determinism + fault tolerance: batch ``i`` is a pure function of
+(seed, step) — after a restart the pipeline resumes from the step recorded
+in the checkpoint with no stream state to persist.  Multi-host sharding:
+each host materializes only its ``(host_id, num_hosts)`` slice of the
+global batch (``local_batch``), matching the pjit data-sharding layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "MemmapTokens", "make_batches"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    host_id: int = 0
+    num_hosts: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id])
+        )
+        # Zipf over a capped support, mapped into the vocab.
+        raw = rng.zipf(self.zipf_a, size=(self.local_batch, self.seq_len + 1))
+        tokens = (raw - 1) % self.vocab_size
+        return {
+            "tokens": tokens[:, :-1].astype(np.int32),
+            "labels": tokens[:, 1:].astype(np.int32),
+        }
+
+
+@dataclasses.dataclass
+class MemmapTokens:
+    path: str
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=np.int32, mode="r")
+        n_seqs = (len(self._data) - 1) // self.seq_len
+        if n_seqs < 1:
+            raise ValueError(f"{self.path}: too small for seq_len={self.seq_len}")
+        self._n_seqs = n_seqs
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id])
+        )
+        idx = rng.integers(0, self._n_seqs, size=self.local_batch)
+        starts = idx * self.seq_len
+        tok = np.stack(
+            [self._data[s : s + self.seq_len + 1] for s in starts]
+        ).astype(np.int32)
+        tok %= self.vocab_size
+        return {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+
+def make_batches(source, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield source.batch(step)
+        step += 1

@@ -1,0 +1,196 @@
+"""Flash attention (causal / sliding-window, GQA) — Pallas TPU kernel.
+
+Covers every attention variant in the assigned architectures:
+  * full causal           (qwen2, yi, arctic, qwen3-moe, jamba attn layers…)
+  * sliding-window        (h2o-danube SWA, gemma3 local layers)  — ``window``
+  * bidirectional encoder (hubert)                               — ``causal=False``
+  * GQA                   — kv heads indexed as ``q_head // group`` in the
+                            BlockSpec index_map, so KV tiles are fetched once
+                            per kv head, not per q head.
+
+Memory discipline (the paper's SPM blocking at VMEM scale): the kernel never
+materializes the (Sq, Skv) score matrix — only (bq, bkv) tiles live in VMEM,
+with the online-softmax running state (m, l, acc) in fp32 VMEM scratch
+persisted across the innermost (kv) grid dimension.  Fully-masked tiles are
+skipped with ``pl.when`` (no MXU work; the DMA still streams, noted in §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_KV"]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    n_kv: int,
+    bq: int,
+    bkv: int,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    sm_scale: float,
+    skv_real: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level bounds: skip tiles that are entirely masked.
+    q_lo = i * bq + q_offset          # smallest query position in this tile
+    q_hi = q_lo + bq - 1
+    kv_lo = j * bkv
+    kv_hi = kv_lo + bkv - 1
+    live = kv_lo < skv_real  # tile of pure kv padding
+    if causal:
+        live = jnp.logical_and(live, kv_lo <= q_hi)
+    if window is not None:
+        live = jnp.logical_and(live, kv_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_pos = kv_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = kv_pos < skv_real  # kv padding never attended
+        if causal:
+            mask = jnp.logical_and(mask, kv_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - kv_pos < window)
+
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bkv, d)
+        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)          # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "sm_scale",
+        "block_q",
+        "block_kv",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    For Sq < Skv (decode / suffix prefill) queries are aligned to the *end*
+    of the kv sequence (q position = Skv - Sq + row).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA mismatch: {hq} q heads vs {hkv} kv heads")
+    if skv < sq:
+        raise ValueError(f"kv shorter than q: {skv} < {sq}")
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    q_offset = skv - sq
+
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    pq, pkv = (-sq) % bq, (-skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        # Padded kv positions must never be attended: with causal=True they
+        # sit beyond every real query position only if q is right-aligned;
+        # enforce via an effective window over real positions instead.
+    sqp, skvp = sq + pq, skv + pkv
+    grid = (b, hq, sqp // bq, skvp // bkv)
+
+    kern = functools.partial(
+        _attn_kernel,
+        n_kv=grid[3],
+        bq=bq,
+        bkv=bkv,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        sm_scale=sm_scale,
+        skv_real=skv,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bkv, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bkv, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    if pq:
+        out = out[:, :, :sq, :]
+    return out

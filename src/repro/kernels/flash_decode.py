@@ -1,0 +1,125 @@
+"""Flash-decode: one query token against a long KV cache — Pallas TPU.
+
+Decode attention is the serving hot loop: for every new token, each query
+head streams the whole cache (memory-bound, arithmetic intensity ~1).  The
+kernel keeps the (1, d) online-softmax state in VMEM scratch across the kv
+grid dimension, so HBM traffic is exactly one pass over K and V — no
+(1, S) score row ever round-trips.
+
+Valid-slot semantics match the framework's decode caches
+(`models/attention.py`): slots in [lo, hi) are attended; a rolling SWA
+buffer passes lo=0, hi=cache_len, a partially-filled absolute cache passes
+lo=max(0, count-window), hi=count.  Bounds are per-batch scalars
+(prefetched, not masks), so ragged batches of requests share one kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode"]
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(lo_ref, hi_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, n_kv: int, bkv: int,
+                   sm_scale: float, group: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo = lo_ref[b]
+    hi = hi_ref[b]
+    kv_lo = j * bkv
+    live = jnp.logical_and(kv_lo < hi, kv_lo + bkv > lo)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bkv, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        pos = kv_lo + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        mask = jnp.logical_and(pos >= lo, pos < hi)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "block_kv", "interpret")
+)
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D); lo, hi: (B,) int32 → (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    bkv = min(block_kv, s)
+    while s % bkv:
+        bkv //= 2
+    grid = (b, hq, s // bkv)
+
+    kern = functools.partial(
+        _decode_kernel, n_kv=grid[2], bkv=bkv, sm_scale=sm_scale, group=group
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lo (prefetch scalars)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # hi
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, bkv, d), lambda b_, h, j, g=group: (b_, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bkv, d), lambda b_, h, j, g=group: (b_, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lo, hi, q.reshape(b, hq, 1, d), k, v)[:, :, 0, :]

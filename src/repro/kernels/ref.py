@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the 'host kernels').
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose), and
+doubles as the XLA host path the dispatcher falls back to.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gemm_ref",
+    "gemm_batched_ref",
+    "attention_ref",
+    "ssd_chunk_diag_ref",
+    "moe_gemm_ref",
+]
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def gemm_batched_ref(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    return jax.lax.dot_general(
+        a, b, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Masked softmax attention with GQA, fp32 softmax. Same semantics as
+    ``flash_attention``: q aligned to the end of kv when Sq < Skv."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * sm_scale
+    q_pos = (skv - sq) + jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all -1e30 is uniform; zero them like the kernel
+    any_live = jnp.any(mask, axis=-1)[None, None, :, None]
+    p = jnp.where(any_live, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_chunk_diag_ref(
+    x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Y_diag = (L ∘ (C B^T)) X per (bh, chunk); L[i,j] = exp(Σa_i - Σa_j)·[j<=i]."""
+    xf = x.astype(jnp.float32)
+    af = dt_a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    s = jnp.einsum("zcqn,zckn->zcqk", cf, bf)
+    q = x.shape[2]
+    ii = jnp.arange(q)[:, None]
+    jj = jnp.arange(q)[None, :]
+    l_mask = jnp.where(
+        jj <= ii, jnp.exp(af[..., :, None] - af[..., None, :]), 0.0
+    )
+    y = jnp.einsum("zcqk,zckp->zcqp", s * l_mask, xf)
+    return y.astype(x.dtype)
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+    """(E, C, d) @ (E, d, f) — capacity-grouped expert GEMM."""
+    return gemm_batched_ref(x, w, out_dtype=out_dtype)

@@ -1,0 +1,84 @@
+"""Mamba-2 SSD (state-space duality) chunk kernel — Pallas TPU.
+
+The SSD form turns the selective-SSM recurrence into *matmuls* over chunks —
+the single best fit for a GEMM-offload paper: the "attention-like"
+within-chunk term is
+
+    Y_diag[c] = (L(c) ∘ (C_c @ B_c^T)) @ X_c            (per chunk c)
+
+with L the causal decay mask built from cumulative log-decays.  The
+inter-chunk state recurrence (tiny: (N, P) states) stays in a
+``jax.lax.scan`` outside the kernel; this kernel computes the quadratic
+within-chunk term for all chunks, one (batch*head, chunk) grid cell each,
+entirely in VMEM.
+
+Shapes (per head, already head-batched to BH = batch*heads):
+  x     : (BH, C, Q, P)   chunked inputs  (Q = chunk len, P = head dim)
+  dt_a  : (BH, C, Q)      cumulative log-decay within chunk (inclusive)
+  b     : (BH, C, Q, N)   input  projection (state dim N)
+  c     : (BH, C, Q, N)   output projection
+  out   : (BH, C, Q, P)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_chunk_diag"]
+
+
+def _ssd_chunk_kernel(x_ref, dta_ref, b_ref, c_ref, o_ref, *, q_len: int):
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    dta = dta_ref[0, 0].astype(jnp.float32)   # (Q,)  wait: block (1,1,Q)
+    b = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+
+    # scores: (Q, Q) = C @ B^T  (MXU)
+    s = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    # decay mask L[i, j] = exp(dta_i - dta_j) for j <= i else 0
+    di = dta[:, None]
+    dj = dta[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    l_mask = jnp.where(jj <= ii, jnp.exp(di - dj), 0.0)
+    y = jnp.dot(s * l_mask, x, preferred_element_type=jnp.float32)  # (Q, P)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_diag(
+    x: jax.Array,
+    dt_a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Within-chunk (diagonal-block) SSD term. See module docstring."""
+    bh, nc, q, p = x.shape
+    _, _, _, n = b.shape
+    if dt_a.shape != (bh, nc, q):
+        raise ValueError(f"dt_a shape {dt_a.shape} != {(bh, nc, q)}")
+    grid = (bh, nc)
+    kern = functools.partial(_ssd_chunk_kernel, q_len=q)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nc, q, p), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, dt_a, b, c)

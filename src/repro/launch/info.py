@@ -1,0 +1,51 @@
+"""Arch/cell inspector: params, active params, shape applicability, memory.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.info            # all archs
+  PYTHONPATH=src python -m repro.launch.info --arch yi-6b
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ALL_SHAPES, get_arch, list_archs, shape_applicable
+
+
+def arch_row(name: str) -> str:
+    cfg = get_arch(name)
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    shapes = []
+    for s in ALL_SHAPES:
+        ok, _ = shape_applicable(cfg, s)
+        shapes.append(s.name if ok else f"~~{s.name}~~")
+    memo = []
+    if cfg.fsdp:
+        memo.append("fsdp")
+    if cfg.zero1:
+        memo.append("zero1")
+    if cfg.optimizer != "adamw":
+        memo.append(cfg.optimizer)
+    return (
+        f"| {name} | {cfg.family} | {cfg.num_layers} | {cfg.d_model} "
+        f"| {n/1e9:.1f}B | {na/1e9:.2f}B | {' '.join(shapes)} "
+        f"| {','.join(memo) or '—'} |"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else [
+        a for a in list_archs() if a != "paper-gemm"
+    ]
+    print("| arch | family | L | d_model | params | active | shapes (~~skip~~) | memory opts |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        print(arch_row(a))
+
+
+if __name__ == "__main__":
+    main()

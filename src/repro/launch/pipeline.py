@@ -1,0 +1,87 @@
+"""Pipeline parallelism (GPipe schedule) over a mesh axis.
+
+The assigned shapes never *need* PP at 256–512 chips (DESIGN.md §4), but a
+1000+-node deployment of the deeper archs would pipeline across pods; this
+module provides the schedule as a first-class, tested feature.
+
+Design: stages live on the ``model`` (or any) mesh axis; stage parameters
+are stacked on a leading (S, …) axis sharded ``P(axis, …)``.  Under a
+``shard_map``, a ``lax.scan`` runs the classic GPipe wavefront — at tick
+``t`` stage ``k`` processes microbatch ``t−k`` — with activations handed to
+the next stage by ``lax.ppermute``.  Backward is pure autodiff: the
+transpose of ``ppermute`` is the reverse permute, so the gradient wavefront
+flows backward through the pipeline automatically (no hand-written bwd
+schedule).
+
+Bubble fraction = (S−1)/(M+S−1) — pick microbatches M ≫ S.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(
+    stage_params,
+    x: jax.Array,
+    stage_fn: Callable,
+    mesh,
+    *,
+    axis: str = "model",
+    num_microbatches: int | None = None,
+):
+    """Run ``stage_fn`` S times as a pipeline over mesh axis ``axis``.
+
+    stage_params: pytree with leading stage dim (S, …) on every leaf.
+    x: (B, …) global batch (replicated across the pipeline axis).
+    stage_fn(params_slice, x_mb) -> y_mb with y_mb.shape == x_mb.shape.
+    Returns (B, …) outputs equivalent to sequentially applying all stages.
+    """
+    s = mesh.shape[axis]
+    b = x.shape[0]
+    m = num_microbatches or s
+    if b % m:
+        raise ValueError(f"batch {b} not divisible by {m} microbatches")
+    mb = b // m
+    xmb = x.reshape(m, mb, *x.shape[1:])
+
+    def local(params_loc, xmb_):
+        idx = jax.lax.axis_index(axis)
+        p_slice = jax.tree_util.tree_map(lambda a: a[0], params_loc)
+        zero = jnp.zeros_like(xmb_[0])
+
+        def tick(buf, t):
+            # stage 0 ingests microbatch t (clamped; masked at the end),
+            # stages k>0 consume the activation handed over last tick.
+            x_in = jnp.where(idx == 0, xmb_[jnp.clip(t, 0, m - 1)], buf)
+            y = stage_fn(p_slice, x_in)
+            y_next = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(s - 1)]
+            )
+            return y_next, y
+
+        _, ys = jax.lax.scan(tick, zero, jnp.arange(m + s - 1))
+        # microbatch j completes on the LAST stage at tick j + s - 1
+        outs = ys[s - 1 :]                                # (M, mb, …)
+        outs = jnp.where(idx == s - 1, outs, 0.0)
+        return jax.lax.psum(outs, axis)                   # broadcast result
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            jax.tree_util.tree_map(lambda _: P(axis), stage_params),
+            P(*((None,) * xmb.ndim)),
+        ),
+        out_specs=P(*((None,) * xmb.ndim)),
+        check_vma=False,
+    )
+    out = fn(stage_params, xmb)
+    return out.reshape(b, *x.shape[1:])

@@ -1,0 +1,119 @@
+"""Batched serving driver: prefill + decode with a KV/state cache.
+
+A deliberately small but real serving loop: requests arrive with prompts,
+are padded into a batch, prefilled (full forward building the cache via
+teacher-forced decode), then decoded token-by-token with greedy/temperature
+sampling.  The same ``serve_step`` is what the decode dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: np.ndarray          # (B, max_new)
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+def serve_batch(
+    arch: str,
+    prompts: List[List[int]],
+    *,
+    smoke: bool = True,
+    max_new_tokens: int = 16,
+    cache_len: int = 128,
+    temperature: float = 0.0,
+    seed: int = 0,
+    params=None,
+) -> ServeResult:
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    if not cfg.embed_inputs:
+        raise ValueError("serving driver targets token-input archs")
+    if cfg.is_encoder:
+        raise ValueError("encoder-only arch has no decode step")
+    model = build_model(cfg)
+    if params is None:
+        params = model.init_params(jax.random.PRNGKey(seed))
+
+    bsz = len(prompts)
+    max_prompt = max(len(p) for p in prompts)
+    cache = model.init_decode_cache(bsz, cache_len)
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    # Prefill token-by-token through the decode path (correct for rolling
+    # caches and hybrid state; a fused prefill kernel is a perf option).
+    t0 = time.time()
+    tok = np.zeros((bsz, 1), np.int32)
+    logits = None
+    for t in range(max_prompt):
+        for b, p in enumerate(prompts):
+            tok[b, 0] = p[t] if t < len(p) else 0
+        logits, cache = serve_step(
+            params, cache, jnp.asarray(tok), jnp.int32(t)
+        )
+    prefill_s = time.time() - t0
+
+    rng = np.random.default_rng(seed)
+    out = np.zeros((bsz, max_new_tokens), np.int32)
+    t0 = time.time()
+    for i in range(max_new_tokens):
+        lf = np.asarray(logits, np.float32)
+        if temperature > 0:
+            p = np.exp((lf - lf.max(-1, keepdims=True)) / temperature)
+            p /= p.sum(-1, keepdims=True)
+            nxt = np.array(
+                [rng.choice(lf.shape[-1], p=p[b]) for b in range(bsz)], np.int32
+            )
+        else:
+            nxt = lf.argmax(-1).astype(np.int32)
+        out[:, i] = nxt
+        logits, cache = serve_step(
+            params, cache, jnp.asarray(nxt[:, None]), jnp.int32(max_prompt + i)
+        )
+    decode_s = time.time() - t0
+    return ServeResult(
+        tokens=out,
+        prefill_s=prefill_s,
+        decode_s=decode_s,
+        tokens_per_s=bsz * max_new_tokens / max(decode_s, 1e-9),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, 200, size=args.prompt_len)) for _ in range(args.batch)]
+    res = serve_batch(
+        args.arch, prompts, max_new_tokens=args.max_new,
+        temperature=args.temperature,
+    )
+    print(f"prefill {res.prefill_s:.2f}s decode {res.decode_s:.2f}s "
+          f"{res.tokens_per_s:.1f} tok/s")
+    print(res.tokens)
+
+
+if __name__ == "__main__":
+    main()

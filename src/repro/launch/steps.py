@@ -1,0 +1,128 @@
+"""jit-able step functions: train (grad-accum microbatching), prefill, serve.
+
+``make_train_step`` returns a pure ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` with:
+  * sequential gradient accumulation over ``cfg.num_microbatches`` (memory:
+    activations live for one microbatch only — how the 72-80L × 1M-token
+    train cells fit a 16 GB/chip pod),
+  * optional int8 error-feedback gradient compression before the DP
+    all-reduce (``TrainOptions.compress_grads``),
+  * AdamW or blockwise-int8 AdamW keyed by the arch config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.optim import compression as C
+from repro.optim.adamw import make_optimizer
+from repro.optim.schedules import warmup_cosine
+
+__all__ = ["TrainOptions", "make_train_step", "make_prefill_step", "make_serve_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], nmb: int):
+    """(B, …) -> (nmb, B/nmb, …); 'positions' is (3, B, S) -> (nmb, 3, ·, S).
+
+    The split keeps the *batch* factor major — ``(B,) -> (B/nmb, nmb) ->
+    moveaxis`` — so a data-sharded batch dim stays sharded on the per-step
+    batch and the scan (microbatch) axis is replicated.  The naive
+    ``reshape(nmb, B/nmb)`` puts the sharded major factor on the scan axis
+    and GSPMD then replicates every microbatch's compute across the DP
+    groups (measured: 8x dot-flops inflation at nmb=8)."""
+
+    def leaf(key, x):
+        if key == "positions":
+            b = x.shape[1]
+            assert b % nmb == 0, f"batch {b} % microbatches {nmb}"
+            y = x.reshape(x.shape[0], b // nmb, nmb, *x.shape[2:])
+            return jnp.moveaxis(y, 2, 0)
+        b = x.shape[0]
+        assert b % nmb == 0, f"batch {b} % microbatches {nmb}"
+        y = x.reshape(b // nmb, nmb, *x.shape[1:])
+        return jnp.moveaxis(y, 1, 0)
+
+    return {k: leaf(k, v) for k, v in batch.items()}
+
+
+def init_train_state(model: Model, params, opts: TrainOptions):
+    """(opt_state, error_feedback_buffers_or_None)."""
+    opt_init, _ = make_optimizer(
+        model.cfg, warmup_cosine(opts.peak_lr, opts.warmup_steps, opts.total_steps)
+    )
+    opt_state = opt_init(params)
+    err = C.init_error_buffer(params) if opts.compress_grads else None
+    return opt_state, err
+
+
+def make_train_step(model: Model, opts: TrainOptions = TrainOptions()):
+    cfg = model.cfg
+    _, opt_update = make_optimizer(
+        cfg, warmup_cosine(opts.peak_lr, opts.warmup_steps, opts.total_steps)
+    )
+    nmb = cfg.num_microbatches
+    accum_dtype = jnp.dtype(cfg.accum_dtype)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(params, opt_state, err, batch):
+        if nmb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, nmb)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+
+            def body(acc, mb):
+                from repro.core import accounting
+
+                with accounting.scaled(nmb):  # mb scan body runs nmb times
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(accum_dtype), acc, g
+                )
+                return acc, l
+
+            gsum, losses = jax.lax.scan(body, g0, mbs)
+            grads = jax.tree_util.tree_map(lambda g: (g / nmb), gsum)
+            loss = jnp.mean(losses)
+
+        if err is not None:
+            grads, err = C.compress_decompress(grads, err)
+
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32)}
+        return new_params, new_opt, err, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens, cache_index):
+        return model.decode_step(params, cache, tokens, cache_index)
+
+    return serve_step

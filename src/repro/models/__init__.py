@@ -1,0 +1,5 @@
+"""repro.models — composable model zoo; every matmul goes through repro.core.blas."""
+
+from repro.models.model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

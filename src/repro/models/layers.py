@@ -1,0 +1,235 @@
+"""Shared model layers. Every contraction goes through the BLAS seam."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blas
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "mrope",
+    "mlp_apply",
+    "init_dense",
+    "init_norm",
+]
+
+
+# ---------------------------------------------------------------------------
+# init helpers (pure; callers pass split keys)
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, dtype, *, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype, *, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# norms (fp32 internals)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, p, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, p, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(x, p, eps, kind: str):
+    return rms_norm(x, p, eps) if kind == "rmsnorm" else layer_norm(x, p, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (theta may be a traced per-layer scalar — gemma3 local/global)
+# ---------------------------------------------------------------------------
+
+def _rope_rotate(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32; theta: scalar (may be traced)."""
+    d = x.shape[-1]
+    half = d // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B, S, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    return _rope_rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions: jax.Array, theta, sections=(2, 3, 3)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) — temporal / height / width position streams.  The
+    rotary half-dim is split into ``sections`` (2:3:3 of every 8 dims, per
+    the paper), each rotated by its own stream.  Text tokens carry identical
+    streams, reducing to standard RoPE.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    total = sum(sections)
+    # Partition the frequency axis into contiguous section bands.
+    bounds = []
+    start = 0
+    for s in sections:
+        size = (half * s) // total
+        bounds.append((start, start + size))
+        start += size
+    bounds[-1] = (bounds[-1][0], half)
+    ang_parts = []
+    for (lo, hi), stream in zip(bounds, range(3)):
+        pos = positions[stream].astype(jnp.float32)[..., None]     # (B, S, 1)
+        ang_parts.append(pos * inv_freq[lo:hi])
+    ang = jnp.concatenate(ang_parts, axis=-1)                      # (B, S, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    return _rope_rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU) — dense FFN through the BLAS seam
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype, kind: str):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": init_dense(ks[0], d, d_ff, dtype),
+            "w_up": init_dense(ks[1], d, d_ff, dtype),
+            "w_down": init_dense(ks[2], d_ff, d, dtype),
+        }
+    return {
+        "w_up": init_dense(ks[0], d, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": init_dense(ks[1], d_ff, d, dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def psum_cast_dtype(dtype):
+    """Reduction dtype for TP psums. bf16 on real hardware (halves wire
+    bytes); f32 on the XLA:CPU emulation backend, whose AllReducePromotion
+    pass crashes cloning bf16 all-reduces produced by partially-manual
+    shard_maps (observed: 'Invalid binary instruction opcode copy')."""
+    import jax as _jax
+
+    if _jax.default_backend() == "cpu" and jnp.dtype(dtype) == jnp.bfloat16:
+        return jnp.float32
+    return dtype
+
+
+def _mlp_block_tp(p, x: jax.Array, kind: str, mesh) -> Optional[jax.Array]:
+    """Whole MLP under one shard_map: d_ff column/row slices stay local,
+    ONE bf16 psum forward + one backward (§Perf hillclimb #2).  GSPMD's
+    schedule all-reduces the fp32 products and pays per-projection dX
+    reductions.  Returns None when topology/shapes don't apply."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    if x.ndim != 3 or "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    n_model = mesh.shape["model"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    d_ff = p["w_up"].shape[1] if "w_up" in p else p["w_gate"].shape[1]
+    if x.shape[0] % n_dp or d_ff % n_model or n_model <= 1:
+        return None
+
+    if kind == "swiglu":
+
+        def local(xl, wg, wu, wd):
+            g = jax.lax.dot_general(xl, wg, (((2,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            u = jax.lax.dot_general(xl, wu, (((2,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            h = (jax.nn.silu(g) * u).astype(xl.dtype)
+            y = jax.lax.dot_general(h, wd, (((2,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
+            return y.astype(xl.dtype)
+
+        fn = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(dp, None, None), P(None, "model"), P(None, "model"),
+                      P("model", None)),
+            out_specs=P(dp, None, None),
+            check_vma=False,
+        )
+        _record_mlp_cost(x, d_ff, 3)
+        return fn(x, p["w_gate"], p["w_up"], p["w_down"])
+
+    def local_gelu(xl, wu, bu, wd, bd):
+        h = jax.lax.dot_general(xl, wu, (((2,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) + bu
+        h = jax.nn.gelu(h).astype(xl.dtype)
+        y = jax.lax.dot_general(h, wd, (((2,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
+        return y.astype(xl.dtype) + bd.astype(xl.dtype)
+
+    fn = jax.shard_map(
+        local_gelu, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, "model"), P("model"),
+                  P("model", None), P(None)),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )
+    _record_mlp_cost(x, d_ff, 2)
+    return fn(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+
+
+def _record_mlp_cost(x, d_ff, n_mats):
+    from repro.core import cost_model as cm
+    from repro.core.hero import engine
+
+    b, s, d = x.shape
+    engine().launch(
+        cm.gemm_cost(b * s, d_ff * n_mats, d, jnp.dtype(x.dtype).itemsize),
+        dtype=str(x.dtype), shape_key=f"tp-mlp:{x.shape}x{d_ff}",
+        pallas_eligible=True,
+    )
+
+
+def mlp_apply(p, x: jax.Array, kind: str) -> jax.Array:
+    import os as _os
+
+    from repro.sharding.annotate import _ambient_mesh
+
+    mesh = _ambient_mesh()
+    if mesh is not None and not _os.environ.get("REPRO_DISABLE_TP_MLP"):
+        y = _mlp_block_tp(p, x, kind, mesh)
+        if y is not None:
+            return y
+    if kind == "swiglu":
+        g = blas.matmul(x, p["w_gate"])
+        u = blas.matmul(x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return blas.matmul(h, p["w_down"])
+    h = blas.linear(x, p["w_up"], p["b_up"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return blas.linear(h, p["w_down"], p["b_down"])

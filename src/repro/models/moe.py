@@ -1,0 +1,336 @@
+"""Mixture-of-Experts FFN with sort-based, expert-parallel dispatch.
+
+Dispatch is megablox-style: token copies are sorted by assigned expert,
+packed into a static-capacity (E, C, d) buffer, run through the grouped
+expert GEMM (the BLAS seam's ``moe_gemm`` — experts become the outer
+parallel grid dim of the device kernel), and scattered back weighted by the
+router gates.  Static capacity keeps every tile MXU-dense and the whole
+thing shardable: the (E, …) dims partition over the ``model`` mesh axis
+(expert parallelism), and the gather/scatter lower to all-to-alls.
+
+Arctic's "dense residual" variant runs a standard dense FFN in parallel and
+sums the outputs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blas
+from repro.models import layers as L
+from repro.sharding.annotate import constrain
+
+__all__ = ["init_moe", "moe_ffn", "expert_capacity"]
+
+
+def expert_capacity(num_tokens: int, cfg) -> int:
+    """Static per-expert slot count (ceil to an MXU-friendly multiple of 8)."""
+    ideal = num_tokens * cfg.experts_per_token / cfg.num_experts
+    cap = int(math.ceil(ideal * cfg.capacity_factor / 8.0) * 8)
+    return max(cap, 8)
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": L.init_dense(ks[0], d, e, jnp.float32, scale=scale),
+        "we_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "we_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "we_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * f ** -0.5).astype(dtype),
+    }
+    if cfg.dense_residual:
+        p["dense"] = L.init_mlp(ks[4], d, cfg.d_ff, dtype, cfg.mlp_kind)
+    return p
+
+
+def _top_k_gates(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Softmax-then-topk router (qwen/jamba convention), renormalized."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                  # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _router(p, xf, cfg):
+    """Logits, renormalized top-k gates, and Switch-style aux loss.
+
+    Router math stays fp32; the *returned gates* are cast to the payload
+    dtype — an fp32 gate multiplying bf16 expert outputs upcasts the whole
+    dispatch backward pass to fp32 and doubles the EP wire volume."""
+    k, e = cfg.experts_per_token, cfg.num_experts
+    logits = blas.matmul(xf, p["router"].astype(xf.dtype), out_dtype=jnp.float32)
+    gates, idx = _top_k_gates(logits, k)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+    return gates.astype(xf.dtype), idx, aux_loss
+
+
+def _expert_mlp(p, eb, x_dtype):
+    """(E, ..., d) -> (E, ..., d) through the expert GEMMs (BLAS seam).
+    Shape-preserving on all free dims (see blas.expert_matmul)."""
+    g = blas.expert_matmul(eb, p["we_gate"])
+    u = blas.expert_matmul(eb, p["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x_dtype) * u
+    return blas.expert_matmul(h, p["we_down"])
+
+
+def _moe_global(p, xf, gates, idx, cfg):
+    """Mesh-wide sort dispatch — the naive baseline (§Perf)."""
+    t, d = xf.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = expert_capacity(t, cfg)
+
+    flat_expert = idx.reshape(t * k)
+    flat_gate = gates.reshape(t * k)
+    order = jnp.argsort(flat_expert)                      # GLOBAL sort
+    sorted_expert = flat_expert[order]
+    sorted_token = order // k
+    sorted_gate = flat_gate[order]
+
+    counts = jnp.sum(jax.nn.one_hot(flat_expert, e, dtype=jnp.int32), axis=0)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_expert]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_expert * cap + rank, e * cap)
+
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype)
+    buf = buf.at[slot].set(xf[sorted_token] * keep[:, None].astype(xf.dtype))
+    y = _expert_mlp(p, buf[: e * cap].reshape(e, cap, d), xf.dtype)
+    y_flat = jnp.concatenate([y.reshape(e * cap, d), jnp.zeros((1, d), y.dtype)])
+    contrib = y_flat[slot] * (sorted_gate * keep).astype(y.dtype)[:, None]
+    return jnp.zeros((t, d), xf.dtype).at[sorted_token].add(contrib)
+
+
+def _moe_grouped(p, xf, gates, idx, cfg):
+    """Group-local dispatch (§Perf hillclimb #1).
+
+    Tokens are split into G groups aligned with the data shards; the sort,
+    rank/capacity bookkeeping and both scatters are *row-local* (vectorized
+    over G, so a data-sharded G axis never communicates).  The only
+    cross-device traffic is the (G, E) transpose that carries each routed
+    token payload to its expert's model-shard and back — the minimal EP
+    all-to-all volume (2 · T · k · d bytes globally).
+    """
+    t, d = xf.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    g_ = cfg.dispatch_groups if cfg.dispatch_groups > 0 else 1
+    while t % g_:
+        g_ //= 2
+    g_ = max(g_, 1)
+    tg = t // g_
+    cap_g = expert_capacity(tg, cfg)                      # per-group capacity
+
+    xg = xf.reshape(g_, tg, d)
+    flat_expert = idx.reshape(g_, tg * k)
+    flat_gate = gates.reshape(g_, tg * k)
+    order = jnp.argsort(flat_expert, axis=-1)             # row-local sorts
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=-1)
+    sorted_token = order // k                             # (G, Tg·k)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=-1)
+
+    counts = jnp.sum(
+        jax.nn.one_hot(flat_expert, e, dtype=jnp.int32), axis=1
+    )                                                     # (G, E)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    rank = (
+        jnp.arange(tg * k, dtype=jnp.int32)[None]
+        - jnp.take_along_axis(starts, sorted_expert, axis=-1)
+    )
+    keep = rank < cap_g
+    slot = jnp.where(keep, sorted_expert * cap_g + rank, e * cap_g)
+
+    # Dropped copies: clamp to a real slot, zeroed by the keep mask —
+    # scatter-ADD makes the clamped writes harmless (they add zeros).
+    slot = jnp.clip(slot, 0, e * cap_g - 1)
+    keep_f = keep.astype(xf.dtype)
+
+    def pack_row(xg_row, tok_row, slot_row, keep_row):
+        vals = jnp.take(xg_row, tok_row, axis=0) * keep_row[:, None]
+        return jnp.zeros((e * cap_g, d), xg_row.dtype).at[slot_row].add(vals)
+
+    # vmap → scatter with explicit batching dims: row-local under a
+    # data-sharded G (advanced gi-indexing defeated the SPMD partitioner).
+    buf = jax.vmap(pack_row)(xg, sorted_token, slot, keep_f)   # (G, E·Cg, d)
+
+    # Split E·Cg (unsharded) and transpose: the ONLY cross-device move —
+    # a (data <-> model) all-to-all carrying each routed token once.
+    ebuf = buf.reshape(g_, e, cap_g, d).swapaxes(0, 1)         # (E, G, Cg, d)
+    ebuf = constrain(ebuf, "model", None, None, None)
+    y = _expert_mlp(p, ebuf, xf.dtype)                         # (E, G, Cg, d)
+    y_back = y.swapaxes(0, 1)                                  # all-to-all back
+    y_back = constrain(y_back, "dp", None, None, None)
+    y_flat = y_back.reshape(g_, e * cap_g, d)                  # unsharded merge
+
+    def unpack_row(y_row, tok_row, slot_row, w_row):
+        contrib = jnp.take(y_row, slot_row, axis=0) * w_row[:, None]
+        return jnp.zeros((tg, d), y_row.dtype).at[tok_row].add(contrib)
+
+    out = jax.vmap(unpack_row)(
+        y_flat, sorted_token, slot, (sorted_gate * keep).astype(y_flat.dtype)
+    )
+    return out.reshape(t, d)
+
+
+def _moe_shard_map(p, xf, cfg, mesh):
+    """Explicit-collective dispatch (§Perf hillclimb, final form).
+
+    Tokens are sharded over (dp × model) — every device routes and packs its
+    own ~T/devices tokens locally (sort/rank/scatter never leave the chip),
+    then ONE ``lax.all_to_all`` over the model axis carries each routed
+    token copy to its expert's owner and one carries results back: the
+    minimal EP wire volume.  Experts are replicated across the data axis
+    (weights are model-sharded), so no cross-data traffic exists at all.
+    GSPMD could not be coaxed into this schedule (it kept materializing
+    all-gathers around the pack/unpack scatters — see §Perf iterations 2-4);
+    shard_map states it exactly.
+    """
+    import numpy as _np
+    from jax.sharding import PartitionSpec as P
+
+    t, d = xf.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_model = mesh.shape["model"]
+    n_dp = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tij = t // (n_dp * n_model)
+    cap_ij = expert_capacity(tij, cfg)
+    e_loc = e // n_model
+    tok_spec = P(dp + ("model",), None)
+
+    def local_fn(xf_loc, router, we_gate, we_up, we_down):
+        # ---- route + pack: all chip-local --------------------------------
+        logits = (xf_loc @ router.astype(xf_loc.dtype)).astype(jnp.float32)
+        gates, idx = _top_k_gates(logits, k)
+        gates = gates.astype(xf_loc.dtype)
+        probs = jax.nn.softmax(logits, axis=-1)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+        aux = e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, dp + ("model",)) if dp else jax.lax.pmean(aux, "model")
+
+        flat_e = idx.reshape(tij * k)
+        flat_g = gates.reshape(tij * k)
+        order = jnp.argsort(flat_e)
+        se = flat_e[order]
+        st_ = order // k
+        sg = flat_g[order]
+        counts = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=0)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(tij * k, dtype=jnp.int32) - starts[se]
+        keep = rank < cap_ij
+        slot = jnp.clip(se * cap_ij + rank, 0, e * cap_ij - 1)
+        vals = xf_loc[st_] * keep[:, None].astype(xf_loc.dtype)
+        buf = jnp.zeros((e * cap_ij, d), xf_loc.dtype).at[slot].add(vals)
+
+        # ---- THE all-to-all: expert blocks to their model-shard owners ----
+        buf = buf.reshape(n_model, e_loc * cap_ij, d)
+        ex = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0)
+        # (n_model peers, e_loc·cap_ij, d) -> (e_loc, n_model·cap_ij, d)
+        ex = ex.reshape(n_model, e_loc, cap_ij, d).swapaxes(0, 1)
+        ex = ex.reshape(e_loc, n_model * cap_ij, d)
+
+        # ---- expert MLP on the local experts ------------------------------
+        g = jax.lax.dot_general(
+            ex, we_gate, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).astype(xf_loc.dtype)
+        u = jax.lax.dot_general(
+            ex, we_up, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).astype(xf_loc.dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xf_loc.dtype) * u
+        y = jax.lax.dot_general(
+            h, we_down, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).astype(xf_loc.dtype)
+
+        # ---- return trip + local unpack -----------------------------------
+        y = y.reshape(e_loc, n_model, cap_ij, d).swapaxes(0, 1)
+        y = y.reshape(n_model, e_loc * cap_ij, d)
+        y = jax.lax.all_to_all(y, "model", split_axis=0, concat_axis=0)
+        y = y.reshape(e * cap_ij, d)
+        contrib = y[slot] * (sg * keep.astype(sg.dtype))[:, None]
+        out = jnp.zeros((tij, d), xf_loc.dtype).at[st_].add(contrib)
+        return out, aux
+
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(tok_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(tok_spec, P()),
+        check_vma=False,
+    )
+    # Seam accounting (global workload) — shard_map bypasses blas.*.
+    from repro.core import cost_model as _cm
+    from repro.core.hero import engine as _engine
+
+    cap_total = e * expert_capacity(t, cfg)
+    for f_dim in (cfg.moe_d_ff, cfg.moe_d_ff, d):
+        _engine().launch(
+            _cm.gemm_cost(cap_total // e, f_dim, d, 2, batch=e, op="moe_gemm"),
+            dtype=str(xf.dtype),
+            shape_key=f"shardmap-moe:{t}x{d}",
+            pallas_eligible=True,
+        )
+    return fn(
+        xf, p["router"], p["we_gate"], p["we_up"], p["we_down"]
+    )
+
+
+def _shard_map_usable(cfg, t: int) -> bool:
+    from repro.sharding.annotate import _ambient_mesh
+
+    mesh = _ambient_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    try:
+        import numpy as _np
+
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        n = int(_np.prod([mesh.shape[a] for a in dp + ("model",)]))
+        return (
+            t % n == 0
+            and cfg.num_experts % mesh.shape["model"] == 0
+            and t // n >= 1
+        )
+    except Exception:
+        return False
+
+
+def moe_ffn(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss). Static-capacity EP dispatch.
+
+    Dispatch mode (cfg.moe_dispatch):
+      "auto"    — shard_map explicit collectives when a compatible mesh is
+                  ambient, else the grouped GSPMD path (CPU tests, local).
+      "grouped" — group-local GSPMD dispatch.
+      "global"  — mesh-wide sort (naive §Perf baseline).
+    """
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    mode = cfg.moe_dispatch
+    if mode == "auto" and _shard_map_usable(cfg, b * s):
+        from repro.sharding.annotate import _ambient_mesh
+
+        out, aux_loss = _moe_shard_map(p, xf, cfg, _ambient_mesh())
+        if cfg.dense_residual:
+            out = out + L.mlp_apply(p["dense"], xf, cfg.mlp_kind)
+        return out.reshape(b, s, d), aux_loss
+
+    gates, idx, aux_loss = _router(p, xf, cfg)
+    if mode == "global":
+        out = _moe_global(p, xf, gates, idx, cfg)
+    else:
+        out = _moe_grouped(p, xf, gates, idx, cfg)
+    if cfg.dense_residual:
+        out = out + L.mlp_apply(p["dense"], xf, cfg.mlp_kind)
+    return out.reshape(b, s, d), aux_loss

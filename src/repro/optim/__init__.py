@@ -1,0 +1,18 @@
+"""repro.optim — optimizers, schedules, gradient compression."""
+
+from repro.optim.adamw import OptState, adamw, adamw8bit, clip_by_global_norm, make_optimizer
+from repro.optim.compression import compress_decompress, compressed_psum, init_error_buffer
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "adamw8bit",
+    "clip_by_global_norm",
+    "make_optimizer",
+    "compress_decompress",
+    "compressed_psum",
+    "init_error_buffer",
+    "constant",
+    "warmup_cosine",
+]

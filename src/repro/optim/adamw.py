@@ -1,0 +1,194 @@
+"""AdamW (+ blockwise-int8 moment variant) — hand-rolled, pure pytrees.
+
+The 8-bit variant stores both Adam moments as int8 with per-block fp32
+scales (bitsandbytes-style blockwise dynamic quantization).  It exists for
+the ≥398B MoE architectures, where fp32 moments alone (8 bytes/param) exceed
+the 256-chip pod's HBM — with int8 moments the arctic-480b / jamba-398b
+training cells fit (see EXPERIMENTS.md §Dry-run memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "adamw8bit", "clip_by_global_norm", "OptState"]
+
+QBLOCK = 256  # quantization block (elements)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# fp32-moment AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * jnp.square(gf)
+            mh = m2 / c1
+            vh = v2 / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state.mu)
+        flat_v = jax.tree_util.tree_leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 moments
+# ---------------------------------------------------------------------------
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8, original shape
+    scale: jax.Array    # fp32, (..., last_dim / qblock) — axis-aligned blocks
+
+
+def _qblock_for(last_dim: int) -> int:
+    """Largest power-of-two block ≤ QBLOCK dividing the last dim.
+
+    Blocks are axis-aligned (the last dim is split, never the whole leaf
+    flattened): a flatten-reshape destroys the parameter's sharding and
+    GSPMD then REPLICATES the fp32 moment buffers on every device —
+    measured 6.9 TiB/device on arctic-480b before this layout."""
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if last_dim % cand == 0:
+            return cand
+    return 1
+
+
+def _quantize(x: jax.Array) -> QTensor:
+    if x.ndim == 0:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    qb = _qblock_for(last)
+    g = x.reshape(*x.shape[:-1], last // qb, qb)
+    scale = jnp.max(jnp.abs(g), axis=-1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(g / safe[..., None]), -127, 127).astype(jnp.int8)
+    return QTensor(q=q.reshape(x.shape), scale=scale)
+
+
+def _dequantize(qt: QTensor, shape) -> jax.Array:
+    last = shape[-1] if shape else 1
+    qb = last // qt.scale.shape[-1]
+    g = qt.q.reshape(*shape[:-1], last // qb, qb).astype(jnp.float32)
+    out = g * qt.scale[..., None]
+    return out.reshape(shape)
+
+
+def adamw8bit(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> OptState:
+        qz = lambda p: _quantize(jnp.zeros(p.shape, jnp.float32))
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(qz, params),
+            nu=jax.tree_util.tree_map(qz, params),
+        )
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, mq, vq):
+            gf = g.astype(jnp.float32)
+            m = _dequantize(mq, p.shape)
+            # v is stored on a sqrt scale: int8-linear quantization of the
+            # raw second moment distorts small v badly (1/sqrt(v) amplifies);
+            # sqrt-compressed storage halves the dynamic range.
+            v = jnp.square(_dequantize(vq, p.shape))
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * jnp.square(gf)
+            mh = m2 / c1
+            vh = v2 / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                _quantize(m2),
+                _quantize(jnp.sqrt(v2)),
+            )
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        is_qt = lambda x: isinstance(x, QTensor)
+        flat_m = jax.tree_util.tree_leaves(state.mu, is_leaf=is_qt)
+        flat_v = jax.tree_util.tree_leaves(state.nu, is_leaf=is_qt)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+    return init, update
+
+
+def make_optimizer(cfg, lr):
+    """Optimizer factory keyed by ``cfg.optimizer``."""
+    if cfg.optimizer == "adamw8bit":
+        return adamw8bit(lr)
+    return adamw(lr)

@@ -1,0 +1,78 @@
+"""Int8 error-feedback gradient compression for the data-parallel all-reduce.
+
+At 1000+ nodes the DP gradient all-reduce is the largest recurring
+collective.  This module quantizes each gradient leaf to int8 with a per-leaf
+fp32 scale *before* the reduction (4x wire-bytes reduction on the ICI) and
+keeps the quantization error in a local error-feedback buffer added back the
+next step — the standard convergence-preserving trick (1-bit Adam lineage).
+
+Two entry points:
+  * ``compress_decompress``   — quantize→dequantize with error feedback,
+    used inside a pjit'd train step (XLA still all-reduces fp32 wires, but
+    numerics match the compressed path; the wire win needs shard_map).
+  * ``compressed_psum``       — the real thing under ``shard_map``: int8
+    psum over the ``data`` axis (int32 accumulator), then dequantize.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_buffer", "compress_decompress", "compressed_psum"]
+
+
+def init_error_buffer(grads) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads
+    )
+
+
+def _quant_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(g / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, err) -> Tuple[Any, Any]:
+    """Returns (compressed-then-restored grads, new error buffers)."""
+
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quant_leaf(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])
+
+
+def compressed_psum(grads, err, axis_name: str) -> Tuple[Any, Any]:
+    """int8 psum over ``axis_name`` with error feedback (use under shard_map).
+
+    The quantization scale must be SHARED across participants before
+    quantizing (one tiny scalar pmax per leaf) — summing int8 payloads
+    quantized at per-device scales and rescaling afterwards is not a sum.
+    """
+
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        local_scale = jnp.max(jnp.abs(gf)) / 127.0
+        scale = jax.lax.pmax(local_scale, axis_name)       # scalar exchange
+        safe = jnp.where(scale == 0, 1.0, scale)
+        q = jnp.clip(jnp.round(gf / safe), -127, 127).astype(jnp.int8)
+        # int32 accumulate avoids overflow for <= 2^24 participants
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        deq = tot.astype(jnp.float32) * safe
+        local_restored = q.astype(jnp.float32) * safe
+        return deq.astype(g.dtype), gf - local_restored
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])

@@ -1,0 +1,26 @@
+"""LR schedules (warmup + cosine / linear / constant)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, *, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog)
+        )
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn

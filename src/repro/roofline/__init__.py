@@ -1,0 +1,11 @@
+"""repro.roofline — roofline-term derivation from compiled artifacts."""
+
+from repro.roofline.analysis import (
+    HW,
+    Roofline,
+    TPU_V5E_HW,
+    parse_collectives,
+    roofline_terms,
+)
+
+__all__ = ["HW", "Roofline", "TPU_V5E_HW", "parse_collectives", "roofline_terms"]

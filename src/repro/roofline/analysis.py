@@ -1,0 +1,138 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD HLO text and sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (a ring all-X moves ≈ result bytes per participating
+device, so result bytes is the per-device wire estimate — documented
+approximation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+__all__ = ["HW", "TPU_V5E_HW", "parse_collectives", "roofline_terms", "Roofline"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `  %x = bf16[8,128]{1,0} all-gather(...)` or tuple types.
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+    r"(?P<op>all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes per collective kind from (post-SPMD) HLO text."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES
+    }
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op").replace("-start", "")
+        b = _type_bytes(m.group("type"))
+        out[op]["count"] += 1
+        out[op]["bytes"] += b
+    out["total"] = {
+        "count": sum(v["count"] for k, v in out.items() if k in _COLLECTIVES),
+        "bytes": sum(v["bytes"] for k, v in out.items() if k in _COLLECTIVES),
+    }
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # per chip
+    hbm_bw: float          # per chip
+    link_bw: float         # per link
+
+
+TPU_V5E_HW = HW("tpu-v5e", 197.0e12, 819.0e9, 50.0e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self, model_flops: float) -> float:
+        """Useful-FLOPs time at peak / modeled step time (≤1)."""
+        ideal = model_flops / (self.chips * TPU_V5E_HW.peak_flops)
+        return ideal / self.bound_s if self.bound_s > 0 else 0.0
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    chips: int,
+    hw: HW = TPU_V5E_HW,
+) -> Roofline:
+    """All inputs are *global* (whole-mesh) quantities; cost_analysis of an
+    SPMD module reports per-partition numbers × we pass them through as the
+    per-chip workload (see dryrun.py for which convention each field uses).
+    """
+    return Roofline(
+        compute_s=flops / (chips * hw.peak_flops),
+        memory_s=bytes_accessed / (chips * hw.hbm_bw),
+        collective_s=collective_bytes / (chips * hw.link_bw),
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=collective_bytes,
+        chips=chips,
+    )

@@ -1,0 +1,18 @@
+"""repro.runtime — fault tolerance, stragglers, elastic scaling."""
+
+from repro.runtime.elastic import ElasticPlan, replan
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerMonitor,
+    WorkerFailure,
+    run_with_recovery,
+)
+
+__all__ = [
+    "ElasticPlan",
+    "replan",
+    "HeartbeatMonitor",
+    "StragglerMonitor",
+    "WorkerFailure",
+    "run_with_recovery",
+]

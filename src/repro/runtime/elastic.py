@@ -1,0 +1,58 @@
+"""Elastic re-scaling: restore any checkpoint onto any mesh.
+
+Checkpoints store full logical arrays (see repro.checkpoint), so scaling a
+job from N to M pods is: build the new mesh, recompute PartitionSpecs for
+the same param tree, and ``restore(..., shardings=named(new_mesh, specs))``.
+No resharding pass over the checkpoint data is needed — device_put places
+each host's slice directly.
+
+``replan`` also rescales the data-parallel batch splitting: the global
+batch is invariant; hosts' local batches change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.sharding import batch_pspecs, named, opt_pspecs, param_pspecs
+
+__all__ = ["ElasticPlan", "replan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh: object
+    param_shardings: object
+    opt_shardings: Optional[object]
+    global_batch: int
+    local_batch: int
+    num_hosts: int
+
+
+def replan(
+    mesh,
+    param_shapes,
+    opt_shapes=None,
+    *,
+    global_batch: int,
+    num_hosts: int,
+) -> ElasticPlan:
+    if global_batch % num_hosts:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by {num_hosts} hosts"
+        )
+    p_shard = named(mesh, param_pspecs(param_shapes, mesh))
+    o_shard = (
+        named(mesh, opt_pspecs(opt_shapes, mesh)) if opt_shapes is not None else None
+    )
+    return ElasticPlan(
+        mesh=mesh,
+        param_shardings=p_shard,
+        opt_shardings=o_shard,
+        global_batch=global_batch,
+        local_batch=global_batch // num_hosts,
+        num_hosts=num_hosts,
+    )

@@ -1,0 +1,122 @@
+"""Fault-tolerance runtime: failure detection, restart, straggler mitigation.
+
+On a real multi-pod deployment each host runs this supervisor around the
+training loop.  The pieces (all exercised by tests with injected faults):
+
+  * **Heartbeats / failure detection** — ``HeartbeatMonitor`` tracks
+    per-host last-seen times; a host silent for > ``timeout_s`` is declared
+    failed.  (In-process simulation: the test advances a fake clock.)
+  * **Restart-from-checkpoint** — ``run_with_recovery`` wraps the step loop;
+    any step raising ``WorkerFailure`` rolls back to the latest checkpoint
+    and replays.  Because the data pipeline is (seed, step)-pure and the
+    train step is deterministic, recovery is *bitwise* identical to a run
+    without the failure (asserted in tests).
+  * **Straggler mitigation** — ``StragglerMonitor`` keeps a ring buffer of
+    per-step durations per host; hosts slower than ``threshold`` × median
+    over a window are flagged, and the policy hook decides (log / evict →
+    elastic re-shard at the next checkpoint boundary).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "WorkerFailure",
+    "HeartbeatMonitor",
+    "StragglerMonitor",
+    "run_with_recovery",
+]
+
+
+class WorkerFailure(RuntimeError):
+    """A (possibly injected) worker/pod failure observed during a step."""
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    num_hosts: int
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self._last: Dict[int, float] = {h: now for h in range(self.num_hosts)}
+
+    def beat(self, host: int) -> None:
+        self._last[host] = self.clock()
+
+    def failed_hosts(self) -> List[int]:
+        now = self.clock()
+        return [h for h, t in self._last.items() if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.failed_hosts()
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    num_hosts: int
+    window: int = 16
+    threshold: float = 1.8
+
+    def __post_init__(self):
+        self._times: Dict[int, deque] = {
+            h: deque(maxlen=self.window) for h in range(self.num_hosts)
+        }
+
+    def record(self, host: int, step_s: float) -> None:
+        self._times[host].append(step_s)
+
+    def medians(self) -> Dict[int, float]:
+        out = {}
+        for h, dq in self._times.items():
+            if dq:
+                s = sorted(dq)
+                out[h] = s[len(s) // 2]
+        return out
+
+    def stragglers(self) -> List[int]:
+        med = self.medians()
+        if len(med) < 2:
+            return []
+        global_median = sorted(med.values())[len(med) // 2]
+        if global_median <= 0:
+            return []
+        return [h for h, m in med.items() if m > self.threshold * global_median]
+
+
+def run_with_recovery(
+    *,
+    num_steps: int,
+    start_step: int,
+    step_fn: Callable[[int], Tuple[object, float]],
+    save_fn: Callable[[int], None],
+    restore_fn: Callable[[], int],
+    checkpoint_every: int = 10,
+    max_restarts: int = 5,
+):
+    """Drive the step loop with checkpoint/restart semantics.
+
+    ``step_fn(step) -> (metrics, step_seconds)`` may raise WorkerFailure.
+    ``restore_fn() -> step`` rolls state back and returns the resume step.
+    Returns (final_step, metrics_log, num_restarts)."""
+    log: List[object] = []
+    restarts = 0
+    step = start_step
+    while step < num_steps:
+        try:
+            metrics, _dur = step_fn(step)
+            log.append((step, metrics))
+            step += 1
+            if step % checkpoint_every == 0:
+                save_fn(step)
+        except WorkerFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            step = restore_fn()
+    return step, log, restarts

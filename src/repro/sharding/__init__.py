@@ -1,0 +1,19 @@
+"""repro.sharding — logical-axis partitioning rules."""
+
+from repro.sharding.partition import (
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    named,
+    opt_pspecs,
+    param_pspecs,
+)
+
+__all__ = [
+    "batch_pspecs",
+    "cache_pspecs",
+    "dp_axes",
+    "named",
+    "opt_pspecs",
+    "param_pspecs",
+]

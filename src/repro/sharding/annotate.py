@@ -1,0 +1,59 @@
+"""Mesh-aware sharding constraints usable from mesh-agnostic model code.
+
+``constrain(x, "dp", None, "model")`` applies a
+``with_sharding_constraint`` iff tracing happens under an active Mesh
+context; otherwise (single-device tests, local runs) it is the identity.
+The "dp" token expands to whichever data-parallel axes the ambient mesh
+has (("pod","data") on the multi-pod mesh, ("data",) on one pod), so model
+code never hard-codes mesh topology.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["constrain"]
+
+
+def _ambient_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _expand(token, mesh) -> Optional[Tuple[str, ...]]:
+    if token is None:
+        return None
+    if token == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes or None
+    if isinstance(token, str):
+        return token if token in mesh.axis_names else None
+    return token
+
+
+def constrain(x: jax.Array, *spec_tokens):
+    """Best-effort sharding constraint; identity without an active mesh."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = P(*(_expand(t, mesh) for t in spec_tokens))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,61 @@
+"""Collective matmul: overlap the TP all-gather with partial matmuls.
+
+The dense-TP roofline (EXPERIMENTS §Perf, cell 2) is bound by the per-block
+activation exchange.  A bytes-based roofline cannot show *overlap*, but on
+hardware the classic fix is the ring collective matmul (Wang et al.,
+"Overlap communication with dependent computation", ASPLOS'23): instead of
+
+    x_full = all_gather(x_shard);  y = x_full @ w_shard
+
+each of the N steps multiplies the chunk currently held while
+``ppermute``-ing the next one around the ring — the interconnect streams
+while the MXU works, hiding all but one chunk's latency.
+
+``ring_ag_matmul`` computes y_local = x_full @ w_local with x arriving
+sequence/contraction-sharded, exactly the all-gather + matmul pair at the
+entry of a column-parallel block.  Used by the TP blocks when
+``REPRO_RING_MATMUL=1`` (kept opt-in: on the CPU emulation backend it only
+adds loop overhead; the dry-run proves it lowers and partitions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ring_ag_matmul"]
+
+
+def ring_ag_matmul(x_shard: jax.Array, w: jax.Array, axis: str) -> jax.Array:
+    """y = concat_ring(x_shard) @ w, overlapping the gather with compute.
+
+    x_shard: (B, S/N, D) — this device's contraction/sequence shard;
+    w:       (D, F_loc) — this device's weight slice (any column shard);
+    returns  (B, S, F_loc) with rows ordered by source device.
+
+    Must be called inside shard_map with ``axis`` manual.
+    """
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]  # ring
+
+    def dot(u):
+        return jax.lax.dot_general(
+            u, w, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(u.dtype)
+
+    def step(carry, t):
+        chunk = carry
+        y_t = dot(chunk)                       # compute on what we hold...
+        nxt = jax.lax.ppermute(chunk, axis, perm)  # ...while the ring moves
+        # chunk at tick t originated at device (idx - t) mod n
+        src = jnp.mod(idx - t, n)
+        return nxt, (y_t, src)
+
+    _, (ys, srcs) = jax.lax.scan(step, x_shard, jnp.arange(n))
+    # reorder ticks into source order: out[src[t]] = ys[t]
+    order = jnp.argsort(srcs)
+    ys = jnp.take(ys, order, axis=0)           # (N, B, S/N, F_loc)
+    nb, b, sl, f = ys.shape
+    return ys.transpose(1, 0, 2, 3).reshape(b, nb * sl, f)

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device — the 512-way
+# host-device forcing belongs ONLY to launch/dryrun.py (see system design).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,88 @@
+"""Hypothesis property tests on attention-math invariants."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import blas
+
+
+def _qkv(seed, b=1, hq=2, hkv=1, s=24, d=8):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(k1, (b, hq, s, d)),
+        jax.random.normal(k2, (b, hkv, s, d)),
+        jax.random.normal(k3, (b, hkv, s, d)),
+    )
+
+
+@given(seed=st.integers(0, 10_000), t=st.integers(1, 22))
+@settings(max_examples=15, deadline=None)
+def test_causality(seed, t):
+    """Output at position t must not depend on k/v/q beyond t."""
+    q, k, v = _qkv(seed)
+    y1 = blas.attention_math(q, k, v, causal=True)
+    k2 = k.at[:, :, t + 1 :, :].set(99.0)
+    v2 = v.at[:, :, t + 1 :, :].set(-99.0)
+    y2 = blas.attention_math(q, k2, v2, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(y1[:, :, : t + 1]), np.asarray(y2[:, :, : t + 1]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@given(seed=st.integers(0, 10_000), w=st.integers(1, 24))
+@settings(max_examples=15, deadline=None)
+def test_window_ge_seq_equals_full(seed, w):
+    """A window ≥ seq length must equal full causal attention; and any
+    window must only attend inside the window."""
+    q, k, v = _qkv(seed)
+    s = q.shape[2]
+    full = blas.attention_math(q, k, v, causal=True)
+    same = blas.attention_math(q, k, v, causal=True, window=s + w)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(same), rtol=1e-5, atol=1e-5)
+    # windowed output at position t ignores kv older than t-w+1
+    windowed = blas.attention_math(q, k, v, causal=True, window=w)
+    k2 = k.at[:, :, 0, :].set(77.0)
+    v2 = v.at[:, :, 0, :].set(-77.0)
+    w2 = blas.attention_math(q, k2, v2, causal=True, window=w)
+    np.testing.assert_allclose(
+        np.asarray(windowed[:, :, w:]), np.asarray(w2[:, :, w:]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_rows_are_convex_combinations(seed):
+    """Each output vector lies in the convex hull of v rows: bounded by
+    per-dim min/max of v (softmax weights sum to 1)."""
+    q, k, v = _qkv(seed)
+    y = np.asarray(blas.attention_math(q, k, v, causal=False))
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    assert (y >= vmin - 1e-4).all() and (y <= vmax + 1e-4).all()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_batch_permutation_equivariance(seed):
+    q, k, v = _qkv(seed, b=4)
+    perm = np.asarray(jax.random.permutation(jax.random.PRNGKey(seed), 4))
+    y = blas.attention_math(q, k, v, causal=True)
+    y_perm = blas.attention_math(q[perm], k[perm], v[perm], causal=True)
+    np.testing.assert_allclose(
+        np.asarray(y[perm]), np.asarray(y_perm), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(seed=st.integers(0, 10_000), scale=st.floats(0.1, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_value_scaling_linearity(seed, scale):
+    """Attention is linear in V (softmax weights independent of V)."""
+    q, k, v = _qkv(seed)
+    y1 = np.asarray(blas.attention_math(q, k, v, causal=True))
+    y2 = np.asarray(blas.attention_math(q, k, v * scale, causal=True))
+    np.testing.assert_allclose(y1 * scale, y2, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,80 @@
+"""Property tests (hypothesis) for the offload cost model invariants."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    HESOC_VCU128,
+    TPU_V5E,
+    breakdown,
+    decide_offload,
+    gemm_cost,
+    gemv_cost,
+    syrk_cost,
+)
+
+dims = st.integers(min_value=1, max_value=4096)
+itemsizes = st.sampled_from([1, 2, 4, 8])
+platforms = st.sampled_from([HESOC_VCU128, TPU_V5E])
+
+
+@given(m=dims, n=dims, k=dims, i=itemsizes)
+def test_gemm_cost_positive_and_exact(m, n, k, i):
+    c = gemm_cost(m, n, k, i)
+    assert c.flops == 2.0 * m * n * k
+    assert c.staged_bytes == (m * k + k * n + m * n) * i
+    assert c.touched_bytes > 0
+
+
+@given(m=dims, n=dims, k=dims, i=itemsizes, p=platforms)
+@settings(max_examples=50)
+def test_regions_nonnegative(m, n, k, i, p):
+    bd = breakdown(gemm_cost(m, n, k, i), p)
+    assert bd.copy_s >= 0 and bd.fork_join_s >= 0 and bd.compute_s >= 0
+    assert bd.offload_s >= bd.compute_s
+
+
+@given(n=st.integers(min_value=8, max_value=2048), i=itemsizes, p=platforms)
+@settings(max_examples=50)
+def test_speedup_monotone_in_square_size(n, i, p):
+    """Bigger square GEMMs always benefit at least as much from offload."""
+    bd1 = breakdown(gemm_cost(n, n, n, i), p)
+    bd2 = breakdown(gemm_cost(2 * n, 2 * n, 2 * n, i), p)
+    assert bd2.speedup >= bd1.speedup * 0.999  # fp tolerance
+
+
+@given(m=dims, n=dims, k=dims, i=itemsizes)
+@settings(max_examples=50)
+def test_zero_copy_never_slower(m, n, k, i):
+    c = gemm_cost(m, n, k, i)
+    a = breakdown(c, HESOC_VCU128)
+    b = breakdown(c, HESOC_VCU128, zero_copy=True)
+    assert b.offload_s <= a.offload_s
+
+
+@given(m=dims, n=dims, k=dims, i=itemsizes, f=st.floats(0.0, 1.0))
+@settings(max_examples=50)
+def test_residency_reduces_copy(m, n, k, i, f):
+    c = gemm_cost(m, n, k, i)
+    a = breakdown(c, TPU_V5E)
+    b = breakdown(c, TPU_V5E, resident_fraction=f)
+    assert b.copy_s <= a.copy_s + 1e-12
+
+
+@given(m=dims, n=dims, k=dims, i=itemsizes, p=platforms,
+       ms=st.floats(min_value=1.0, max_value=4.0))
+@settings(max_examples=50)
+def test_min_speedup_threshold_consistent(m, n, k, i, p, ms):
+    c = gemm_cost(m, n, k, i)
+    ok, bd = decide_offload(c, p, min_speedup=ms)
+    assert ok == (bd.speedup >= ms)
+
+
+@given(n=dims, k=dims, i=itemsizes)
+def test_syrk_half_of_gemm(n, k, i):
+    assert syrk_cost(n, k, i).flops * 2 == gemm_cost(n, n, k, i).flops
+
+
+@given(m=dims, n=dims, i=itemsizes)
+def test_gemv_flops(m, n, i):
+    assert gemv_cost(m, n, i).flops == 2.0 * m * n

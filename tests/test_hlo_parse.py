@@ -1,0 +1,102 @@
+"""Trip-count-aware HLO analyzer: exactness on known scan structures."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import parse_collectives, roofline_terms
+from repro.roofline.hlo_parse import analyze_module
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_single_dot_exact():
+    c = _compile(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((64, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 16), jnp.float32),
+    )
+    mc = analyze_module(c.as_text())
+    assert mc.dot_flops == pytest.approx(2 * 64 * 32 * 16, rel=0.01)
+
+
+@pytest.mark.parametrize("trip", [1, 5, 33])
+def test_scan_trip_count(trip):
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, ()
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    c = _compile(
+        f,
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((trip, 128, 128), jnp.float32),
+    )
+    mc = analyze_module(c.as_text())
+    assert mc.dot_flops == pytest.approx(2 * 128**3 * trip, rel=0.02)
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(c, wo):
+            def inner(ci, w):
+                return ci @ w, ()
+            c2, _ = jax.lax.scan(inner, c, ws)
+            return c2 @ wo, ()
+        y, _ = jax.lax.scan(outer, x, jnp.stack([jnp.eye(128)] * 3))
+        return y.sum()
+
+    c = _compile(
+        g,
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((5, 128, 128), jnp.float32),
+    )
+    mc = analyze_module(c.as_text())
+    assert mc.dot_flops == pytest.approx(2 * 128**3 * (3 * 5 + 3), rel=0.02)
+
+
+def test_traffic_nonzero_and_scales_with_trip():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, ()
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    m1 = analyze_module(
+        _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((2, 64, 64), jnp.float32)).as_text()
+    )
+    m2 = analyze_module(
+        _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((20, 64, 64), jnp.float32)).as_text()
+    )
+    assert m2.traffic_bytes > 5 * m1.traffic_bytes
+
+
+def test_collective_parse_synthetic():
+    hlo = """
+HloModule test
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %ag = f32[64,8]{1,0} all-gather(%a), dimensions={0}
+  %ar = f32[8,8]{1,0} all-reduce(%a), to_apply=%sum
+  ROOT %out = f32[8,8] copy(%ar)
+}
+"""
+    c = parse_collectives(hlo)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["bytes"] == 64 * 8 * 4
+    assert c["all-reduce"]["bytes"] == 8 * 8 * 4
+    assert c["total"]["count"] == 2
+
+
+def test_roofline_terms_math():
+    r = roofline_terms(197e12, 819e9, 50e9, chips=1)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory", "collective")

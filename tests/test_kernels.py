@@ -1,0 +1,181 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [
+    (128, 128, 128),      # exact tile
+    (256, 128, 384),      # multi-tile k
+    (200, 130, 96),       # ragged everything (padding path)
+    (8, 8, 8),            # tiny
+    (1, 256, 64),         # degenerate m
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_shapes_dtypes(m, n, k, dtype):
+    a, b = _randn(m, k, dtype=dtype), _randn(k, n, dtype=dtype)
+    got = ops.gemm(a, b, interpret=True)
+    want = ref.gemm_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("block", [(128, 128, 128), (64, 64, 64), (128, 64, 256)])
+def test_gemm_block_shapes(block):
+    a, b = _randn(192, 160), _randn(160, 224)
+    got = ops.gemm(a, b, block=block, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.gemm_ref(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("bsz", [1, 3, 8])
+def test_gemm_batched(bsz):
+    a, b = _randn(bsz, 96, 64), _randn(bsz, 64, 80)
+    got = ops.gemm_batched(a, b, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.gemm_batched_ref(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_moe_gemm_is_grouped():
+    e, c, d, f = 4, 32, 48, 56
+    x, w = _randn(e, c, d), _randn(e, d, f)
+    got = ops.moe_gemm(x, w, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.moe_gemm_ref(x, w)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_gemm_fp32_accumulation_bf16_inputs():
+    """bf16 inputs must accumulate in fp32 (MXU semantics), not bf16."""
+    k = 4096
+    a = jnp.full((8, k), 0.01, jnp.bfloat16)
+    b = jnp.full((k, 8), 0.01, jnp.bfloat16)
+    got = np.asarray(ops.gemm(a, b, out_dtype=jnp.float32, interpret=True))
+    # true value k * 1e-4 = 0.4096; bf16 accumulation would lose severely
+    assert abs(got[0, 0] - k * 1e-4) / (k * 1e-4) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    dict(sq=128, skv=128, hq=4, hkv=4, causal=True),
+    dict(sq=128, skv=128, hq=8, hkv=2, causal=True),          # GQA
+    dict(sq=96, skv=96, hq=4, hkv=2, causal=True, window=32), # SWA
+    dict(sq=64, skv=64, hq=4, hkv=4, causal=False),           # encoder
+    dict(sq=16, skv=128, hq=4, hkv=2, causal=True),           # suffix decode
+    dict(sq=100, skv=100, hq=4, hkv=2, causal=True),          # ragged pad
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_variants(case, dtype):
+    d = 32
+    q = _randn(2, case["hq"], case["sq"], d, dtype=dtype)
+    k = _randn(2, case["hkv"], case["skv"], d, dtype=dtype)
+    v = _randn(2, case["hkv"], case["skv"], d, dtype=dtype)
+    got = ops.flash_attention(
+        q, k, v, causal=case["causal"], window=case.get("window"),
+        block_q=32, block_kv=32, interpret=True,
+    )
+    want = ref.attention_ref(
+        q, k, v, causal=case["causal"], window=case.get("window")
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_block_shape_independence():
+    q, k, v = _randn(1, 2, 128, 32), _randn(1, 2, 128, 32), _randn(1, 2, 128, 32)
+    a = ops.flash_attention(q, k, v, block_q=32, block_kv=32, interpret=True)
+    b = ops.flash_attention(q, k, v, block_q=64, block_kv=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash decode (single token vs cache, ragged valid ranges)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    dict(hq=4, hkv=2, s=64, bounds=[(0, 64), (5, 40), (10, 33)]),
+    dict(hq=8, hkv=8, s=96, bounds=[(0, 96), (0, 1), (95, 96)]),
+])
+def test_flash_decode_ragged_bounds(case):
+    from repro.core import blas
+
+    b = len(case["bounds"])
+    d = 16
+    q = _randn(b, case["hq"], d)
+    k = _randn(b, case["hkv"], case["s"], d)
+    v = _randn(b, case["hkv"], case["s"], d)
+    lo = jnp.asarray([x for x, _ in case["bounds"]], jnp.int32)
+    hi = jnp.asarray([y for _, y in case["bounds"]], jnp.int32)
+    out = ops.flash_decode(q, k, v, lo, hi, block_kv=16, interpret=True)
+    pos = jnp.arange(case["s"])
+    for i in range(b):
+        mask = (pos >= lo[i]) & (pos < hi[i])
+        want = blas.attention_math(
+            q[i : i + 1, :, None, :], k[i : i + 1], v[i : i + 1],
+            causal=False, kv_mask=mask[None],
+        )[0, :, 0, :]
+        np.testing.assert_allclose(
+            np.asarray(out[i]), np.asarray(want), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_flash_decode_block_independence():
+    b, hq, hkv, s, d = 2, 4, 2, 128, 32
+    q, k, v = _randn(b, hq, d), _randn(b, hkv, s, d), _randn(b, hkv, s, d)
+    lo = jnp.zeros((b,), jnp.int32)
+    hi = jnp.asarray([s, s // 2], jnp.int32)
+    a = ops.flash_decode(q, k, v, lo, hi, block_kv=32, interpret=True)
+    c = ops.flash_decode(q, k, v, lo, hi, block_kv=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,nc,q,p,n", [(4, 2, 32, 16, 8), (2, 8, 64, 32, 16), (1, 1, 8, 8, 8)])
+def test_ssd_chunk_diag(bh, nc, q, p, n):
+    x = _randn(bh, nc, q, p)
+    dta = jnp.cumsum(-jnp.abs(_randn(bh, nc, q)) * 0.1, axis=-1)
+    b = _randn(bh, nc, q, n)
+    c = _randn(bh, nc, q, n)
+    got = ops.ssd_chunk_diag(x, dta, b, c, interpret=True)
+    want = ref.ssd_chunk_diag_ref(x, dta, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_diag_causality():
+    """Output at position t must not depend on inputs at positions > t."""
+    bh, nc, q, p, n = 1, 1, 16, 8, 4
+    x = _randn(bh, nc, q, p)
+    dta = jnp.cumsum(-jnp.abs(_randn(bh, nc, q)) * 0.1, axis=-1)
+    b, c = _randn(bh, nc, q, n), _randn(bh, nc, q, n)
+    y1 = np.asarray(ops.ssd_chunk_diag(x, dta, b, c, interpret=True))
+    x2 = x.at[:, :, 10:, :].set(123.0)
+    y2 = np.asarray(ops.ssd_chunk_diag(x2, dta, b, c, interpret=True))
+    np.testing.assert_allclose(y1[:, :, :10], y2[:, :, :10], rtol=1e-5)
