@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: collect check test bench
+
+# Fast gate: the whole suite must *collect* with zero errors (seconds, not
+# minutes) — catches missing-dependency and import-drift regressions before
+# any test runs.
+collect:
+	$(PYTHON) -m pytest --collect-only -q
+
+# Tier-1 verify: collect gate first, then the suite.
+check: collect
+	$(PYTHON) -m pytest -x -q
+
+test: check
+
+bench:
+	PYTHONPATH=src:. $(PYTHON) -m benchmarks.cluster_scaling

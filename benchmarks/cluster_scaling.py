@@ -1,0 +1,91 @@
+"""HeroCluster scaling sweep: modeled throughput, 1 -> 8 virtual PMCAs.
+
+A fixed GEMM workload (a serving-shaped mix of large and small calls) is
+pushed through the offload seam against clusters of increasing size.  For
+each size the sweep reports the modeled cluster makespan (per-device
+copy/compute-overlap timelines, devices in parallel), the throughput in
+GFLOP/s, and the per-device trace rollups — asserting that the per-device
+region sums equal the cluster totals.
+
+Throughput must rise monotonically 1 -> 8 for the balanced schedulers; the
+sweep prints all three policies side by side.
+
+Run: PYTHONPATH=src:. python -m benchmarks.cluster_scaling
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import accounting, blas
+from repro.core.hero import SCHEDULERS, engine, offload_policy
+
+# A serving-shaped workload: a few big prefill GEMMs, many medium decode
+# GEMMs, a tail of small projections.  Sizes chosen so every call clears
+# the offload crossover on the TPU platform model.
+WORKLOAD = (
+    [(1024, 1024, 1024)] * 4
+    + [(512, 512, 512)] * 12
+    + [(256, 1024, 256)] * 16
+)
+
+
+def run_workload() -> accounting.OffloadTrace:
+    with accounting.offload_trace() as trace:
+        for m, n, k in WORKLOAD:
+            a = jnp.ones((m, k), jnp.bfloat16)
+            b = jnp.ones((k, n), jnp.bfloat16)
+            blas.gemm(a, b)
+    return trace
+
+
+def sweep(scheduler: str, sizes=(1, 2, 4, 8)) -> list:
+    rows = []
+    for n in sizes:
+        with offload_policy(
+            mode="device", num_devices=n, scheduler=scheduler,
+            platform="tpu-v5e",
+        ):
+            engine().reset()
+            trace = run_workload()
+            engine().sync()
+        per_dev = trace.by_device()
+        copy, fork, comp, _ = trace.totals()
+        # invariant: per-device rollups sum to the cluster totals
+        assert abs(sum(d.copy_s for d in per_dev.values()) - copy) < 1e-12
+        assert abs(sum(d.compute_s for d in per_dev.values()) - comp) < 1e-12
+        makespan = trace.cluster_makespan_s()
+        flops = trace.total_flops()
+        rows.append(
+            {
+                "devices": n,
+                "used": len(per_dev),
+                "makespan_s": makespan,
+                "gflops": flops / makespan / 1e9,
+                "serial_s": copy + fork + comp,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    for scheduler in sorted(SCHEDULERS):
+        print(f"\n# scheduler={scheduler}")
+        print("devices,used,makespan_s,gflops_modeled,serial_s,scaling_vs_1dev")
+        rows = sweep(scheduler)
+        base = rows[0]["gflops"]
+        prev = 0.0
+        monotone = True
+        for r in rows:
+            print(
+                f"{r['devices']},{r['used']},{r['makespan_s']:.6f},"
+                f"{r['gflops']:.1f},{r['serial_s']:.6f},"
+                f"{r['gflops'] / base:.2f}x"
+            )
+            monotone = monotone and r["gflops"] >= prev - 1e-9
+            prev = r["gflops"]
+        print(f"monotone_1_to_8={monotone}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,11 @@ def main() -> None:
 
     gemm_sweep.main()
 
+    _section("cluster_scaling — HeroCluster modeled throughput, 1 -> 8 PMCAs")
+    from benchmarks import cluster_scaling
+
+    cluster_scaling.main()
+
     _section("roofline_table — per-cell roofline terms (from dry-run artifacts)")
     from pathlib import Path
 

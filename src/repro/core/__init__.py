@@ -3,13 +3,21 @@
 Layers (mirroring the paper's Fig. 2):
   platform    — analytic hardware models (heSoC from the paper, TPU v5e)
   cost_model  — three-region offload cost model (copy / fork-join / compute)
-  hero        — offload engine: residency ledger, policy, launch records
+  hero        — offload cluster: N virtual PMCAs, residency ledgers,
+                pluggable scheduler, launch records
   blas        — the BLAS API every model layer calls
-  accounting  — per-call offload trace (the paper's Fig. 3 instrumentation)
+  accounting  — per-call offload trace (the paper's Fig. 3 instrumentation,
+                with per-device rollups and an overlap timeline)
 """
 
 from repro.core import blas
-from repro.core.accounting import OffloadRecord, OffloadTrace, offload_trace
+from repro.core.accounting import (
+    DeviceAggregate,
+    DeviceTimeline,
+    OffloadRecord,
+    OffloadTrace,
+    offload_trace,
+)
 from repro.core.cost_model import (
     OpCost,
     RegionBreakdown,
@@ -21,7 +29,17 @@ from repro.core.cost_model import (
     gemv_cost,
     syrk_cost,
 )
-from repro.core.hero import HeroEngine, OffloadPolicy, engine, offload_policy
+from repro.core.hero import (
+    SCHEDULERS,
+    HeroCluster,
+    HeroEngine,
+    LaunchResult,
+    LaunchTicket,
+    OffloadPolicy,
+    VirtualDevice,
+    engine,
+    offload_policy,
+)
 from repro.core.platform import CPU_HOST, HESOC_VCU128, TPU_V5E, Platform, get_platform
 
 __all__ = [
@@ -38,8 +56,15 @@ __all__ = [
     "gemm_cost",
     "gemv_cost",
     "syrk_cost",
+    "DeviceAggregate",
+    "DeviceTimeline",
+    "HeroCluster",
     "HeroEngine",
+    "LaunchResult",
+    "LaunchTicket",
     "OffloadPolicy",
+    "SCHEDULERS",
+    "VirtualDevice",
     "engine",
     "offload_policy",
     "CPU_HOST",

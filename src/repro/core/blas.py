@@ -121,22 +121,17 @@ def gemm(
     return _accum_dot(a, b, (ca, ((), ())), out_dtype)
 
 
-def _tp_shard_map_matmul(x, w, mode: str, out_dtype):
-    """Explicit tensor-parallel matmul with bf16 cross-device reductions.
+def _tp_plan(x, w, mode: str):
+    """Check whether the explicit-TP shard_map path applies.
 
-    GSPMD places the TP all-reduce on the fp32 dot product (before the bf16
-    cast), doubling wire bytes.  Under shard_map the seam does: local matmul
-    with fp32 accumulation -> cast -> psum in the output dtype.  ``row``:
-    w's first (contracting) dim is model-sharded, psum in forward; ``col``:
-    w's last dim is model-sharded, the (autodiff-generated) psum of dX in
-    backward is bf16 for free because the local primal is already cast.
-    Returns None if the ambient mesh / shapes don't apply.
+    Returns ``(mesh, dp_axes)`` when it does, else None.  Pure inspection —
+    no execution — so the dispatcher can resolve routing *before* recording
+    a backend (the trace must name the path that actually ran).
     """
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
-
     from repro.sharding.annotate import _ambient_mesh
 
+    if mode not in ("row", "col"):
+        return None
     mesh = _ambient_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return None
@@ -147,13 +142,35 @@ def _tp_shard_map_matmul(x, w, mode: str, out_dtype):
     import numpy as _np
 
     n_dp = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
-    b = x.shape[0]
-    if b % n_dp or n_model <= 1:
+    if x.shape[0] % n_dp or n_model <= 1:
         return None
+    if x.shape[-1] != w.shape[0]:
+        return None
+    if mode == "row" and w.shape[0] % n_model:
+        return None
+    if mode == "col" and w.shape[1] % n_model:
+        return None
+    return mesh, dp
+
+
+def _tp_shard_map_matmul(x, w, mode: str, out_dtype, plan):
+    """Explicit tensor-parallel matmul with bf16 cross-device reductions.
+
+    GSPMD places the TP all-reduce on the fp32 dot product (before the bf16
+    cast), doubling wire bytes.  Under shard_map the seam does: local matmul
+    with fp32 accumulation -> cast -> psum in the output dtype.  ``row``:
+    w's first (contracting) dim is model-sharded, psum in forward; ``col``:
+    w's last dim is model-sharded, the (autodiff-generated) psum of dX in
+    backward is bf16 for free because the local primal is already cast.
+    ``plan`` comes from :func:`_tp_plan`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    mesh, dp = plan
     out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
     if mode == "row":
-        if w.shape[0] % n_model or x.shape[-1] != w.shape[0]:
-            return None
 
         def local(xl, wl):
             y = lax.dot_general(
@@ -170,8 +187,6 @@ def _tp_shard_map_matmul(x, w, mode: str, out_dtype):
             check_rep=False,
         )(x, w)
     # col: output dim sharded; bwd dX psum happens in out_dtype
-    if w.shape[1] % n_model or x.shape[-1] != w.shape[0]:
-        return None
 
     def local_col(xl, wl):
         return lax.dot_general(
@@ -210,16 +225,21 @@ def matmul(
     itemsize = jnp.dtype(x.dtype).itemsize
 
     cost = cm.gemm_cost(m, n, k, itemsize)
-    backend = engine().launch(
+    # Resolve routing BEFORE recording: a tensor-parallel matmul runs the
+    # shard_map XLA path, so it must not be recorded (or queued) as a
+    # Pallas launch that never executes.
+    plan = _tp_plan(x, w, tp_mode) if tp_mode in ("row", "col") else None
+    backend, device_id = engine().launch(
         cost,
         dtype=str(x.dtype),
         shape_key=_shape_key(x, w),
-        pallas_eligible=_pallas_gemm_eligible(m, n, k, x.dtype),
+        pallas_eligible=(
+            plan is None and _pallas_gemm_eligible(m, n, k, x.dtype)
+        ),
+        note="tp-shard-map" if plan is not None else "",
     )
-    if tp_mode in ("row", "col"):
-        y = _tp_shard_map_matmul(x, w, tp_mode, out_dtype)
-        if y is not None:
-            return y
+    if plan is not None:
+        return _tp_shard_map_matmul(x, w, tp_mode, out_dtype, plan)
     if backend == "device-pallas":
         from repro.kernels import ops as kops
 

@@ -1,36 +1,57 @@
-"""Offload engine — the HeroSDK analogue (paper Fig. 2, boxes 1-2).
+"""Offload engine — the HeroSDK analogue, scaled to a multi-PMCA cluster.
 
-HeroSDK's ``libhero`` boots the PMCA, manages the manually-partitioned device
-DRAM (``hero_allocator.c``) and copies shared structures into it before the
-first offload; the OpenMP target library then launches kernels through it.
+HeroSDK's ``libhero`` boots *one* PMCA, manages its manually-partitioned
+device DRAM and copies shared structures into it before the first offload.
+HERO (Kurth et al.) and ESP both show the natural next step: one host
+orchestrating *many* accelerator clusters.  This module is that seam.
 
-On the TPU target the XLA runtime owns physical allocation, so the engine's
-job shifts to what still matters at framework scale:
+A :class:`HeroCluster` owns N :class:`VirtualDevice` s.  Each virtual
+device keeps what the paper's runtime kept per PMCA:
 
-* a **residency ledger** — which logical buffers (weights, caches) live on
-  device and therefore never pay the ``data copy`` region again.  This is the
-  device-DRAM partition bookkeeping, one level up;
-* **zero-copy mode** — the paper's projected IOMMU path (donated / resident
-  buffers instead of staged copies);
-* **launch records** — every offload goes through :func:`HeroEngine.launch`,
-  which scores it with the cost model and appends to the active trace,
-  reproducing the paper's instrumentation.
+* a **residency ledger** — which logical buffers (weights, caches) live in
+  that device's DRAM and therefore never pay the ``data copy`` region again;
+* **boot state** — the PMCA boot + L2 image copy happens lazily on the
+  first offload routed to the device, exactly as in HeroSDK;
+* an **in-flight launch queue** — modeled outstanding work, which is what
+  the schedulers balance and what fault tolerance reschedules on loss.
 
-The engine is deliberately stateful-but-tiny: it is the seam where a real
-deployment would hang buffer donation, device health checks and retry logic,
-and the fault-tolerance runtime (``repro.runtime``) drives it that way.
+Every offload goes through :func:`HeroCluster.launch`, which scores the
+call with the cost model, picks a device through the pluggable scheduler
+(``round-robin`` / ``least-loaded`` / ``cost-aware``) and appends an
+:class:`accounting.OffloadRecord` tagged with the device id to the active
+trace — the paper's instrumentation, per device.
+
+``launch`` returns a :class:`LaunchResult`: a ``str`` subclass equal to the
+chosen backend name (``"host"`` / ``"device"`` / ``"device-pallas"``) that
+also carries ``device_id`` and unpacks as ``(backend, device_id)``, so the
+BLAS seam reads the placement while older call sites keep comparing it to
+the backend string.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Dict, Optional, Set
+import itertools
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
 from repro.core import accounting
 from repro.core.cost_model import OpCost, RegionBreakdown, breakdown, decide_offload
 from repro.core.platform import CPU_HOST, Platform, TPU_V5E, get_platform
 
-__all__ = ["HeroEngine", "OffloadPolicy", "engine", "offload_policy"]
+__all__ = [
+    "HeroCluster",
+    "HeroEngine",
+    "LaunchResult",
+    "LaunchTicket",
+    "OffloadPolicy",
+    "SCHEDULERS",
+    "VirtualDevice",
+    "engine",
+    "offload_policy",
+]
+
+HOST_DEVICE_ID = -1
 
 
 @dataclasses.dataclass
@@ -61,26 +82,73 @@ class OffloadPolicy:
             raise ValueError(f"bad offload mode {self.mode!r}")
 
 
-class HeroEngine:
-    """Device manager + offload router (singleton per process)."""
+class LaunchResult(str):
+    """Backend name + placement.  Compares as the backend string."""
 
-    def __init__(self, platform: Platform = TPU_V5E) -> None:
+    device_id: int
+
+    def __new__(cls, backend: str, device_id: int = HOST_DEVICE_ID):
+        self = super().__new__(cls, backend)
+        self.device_id = device_id
+        return self
+
+    @property
+    def backend(self) -> str:
+        return str(self)
+
+    def __iter__(self):
+        # allow `backend, device_id = cluster.launch(...)`
+        return iter((str(self), self.device_id))
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchTicket:
+    """One modeled in-flight offload on a device's queue."""
+
+    op: str
+    shape_key: str
+    offload_s: float
+
+
+class VirtualDevice:
+    """One PMCA-analogue: boot state, residency ledger, in-flight queue.
+
+    The in-flight queue is a bounded window (``MAX_INFLIGHT``): enqueuing
+    past the bound retires the oldest ticket into the completed counters,
+    as a real device's bounded command queue would.  ``pending_s`` therefore
+    reflects *outstanding* work, not all work ever assigned, and long-lived
+    processes don't accumulate tickets without bound.
+    """
+
+    MAX_INFLIGHT = 128
+
+    def __init__(self, device_id: int, platform: Platform = TPU_V5E) -> None:
+        self.device_id = device_id
         self.platform = platform
-        self.policy = OffloadPolicy()
+        self.alive = True
         self._booted = False
-        self._resident: Set[str] = set()
         self._l2_image_loaded = False
+        self._resident: Set[str] = set()
+        self.inflight: List[LaunchTicket] = []
+        self.completed_s = 0.0          # modeled seconds of retired work
+        self.completed_launches = 0
 
     # ---- lifecycle (mirrors hero_snitch.c boot / hero_allocator.c) -------
     def boot(self) -> None:
         """Analogue of booting the PMCA + copying device functions to L2."""
+        if not self.alive:
+            raise RuntimeError(f"device {self.device_id} is failed")
         self._booted = True
         self._l2_image_loaded = True
 
     def reset(self) -> None:
+        self.alive = True
         self._booted = False
         self._l2_image_loaded = False
         self._resident.clear()
+        self.inflight.clear()
+        self.completed_s = 0.0
+        self.completed_launches = 0
 
     @property
     def booted(self) -> bool:
@@ -88,7 +156,6 @@ class HeroEngine:
 
     # ---- residency ledger -------------------------------------------------
     def mark_resident(self, name: str) -> None:
-        """Declare a logical buffer (e.g. 'params', 'kv_cache') device-resident."""
         self._resident.add(name)
 
     def evict(self, name: str) -> None:
@@ -96,6 +163,282 @@ class HeroEngine:
 
     def is_resident(self, name: str) -> bool:
         return name in self._resident
+
+    @property
+    def resident(self) -> frozenset:
+        return frozenset(self._resident)
+
+    # ---- in-flight queue --------------------------------------------------
+    @property
+    def pending_s(self) -> float:
+        """Modeled seconds of queued-but-unretired work."""
+        return sum(t.offload_s for t in self.inflight)
+
+    def enqueue(self, ticket: LaunchTicket) -> None:
+        while len(self.inflight) >= self.MAX_INFLIGHT:
+            oldest = self.inflight.pop(0)
+            self.completed_s += oldest.offload_s
+            self.completed_launches += 1
+        self.inflight.append(ticket)
+
+    def breakdown_for(
+        self, cost: OpCost, policy: OffloadPolicy, shape_key: str
+    ) -> RegionBreakdown:
+        """Score a call on this device with its residency credit applied:
+        operands already resident here never pay the copy region."""
+        return breakdown(
+            cost,
+            self.platform,
+            zero_copy=policy.zero_copy,
+            resident_fraction=(
+                1.0 if self.is_resident(shape_key) else policy.resident_fraction
+            ),
+        )
+
+    def retire_all(self) -> int:
+        """Drain the queue (modeled completion); returns launches retired."""
+        n = len(self.inflight)
+        self.completed_s += self.pending_s
+        self.completed_launches += n
+        self.inflight.clear()
+        return n
+
+    def fail(self) -> List[LaunchTicket]:
+        """Device loss: mark dead, drop residency, surrender in-flight work."""
+        self.alive = False
+        self._booted = False
+        self._l2_image_loaded = False
+        self._resident.clear()
+        orphans = list(self.inflight)
+        self.inflight.clear()
+        return orphans
+
+
+# ---------------------------------------------------------------------------
+# Schedulers.  select(devices, cost, policy) -> VirtualDevice
+# ---------------------------------------------------------------------------
+
+def _round_robin():
+    counter = itertools.count()
+
+    def select(
+        devices: List[VirtualDevice], cost: OpCost, policy: OffloadPolicy,
+        shape_key: str,
+    ) -> VirtualDevice:
+        return devices[next(counter) % len(devices)]
+
+    return select
+
+
+def _least_loaded():
+    def select(
+        devices: List[VirtualDevice], cost: OpCost, policy: OffloadPolicy,
+        shape_key: str,
+    ) -> VirtualDevice:
+        # deterministic tie-break by device id
+        return min(devices, key=lambda d: (d.pending_s, d.device_id))
+
+    return select
+
+
+def _cost_aware():
+    def select(
+        devices: List[VirtualDevice], cost: OpCost, policy: OffloadPolicy,
+        shape_key: str,
+    ) -> VirtualDevice:
+        def completion(d: VirtualDevice) -> float:
+            # residency affinity: operands already on the device skip the
+            # copy region entirely (paper's resident-buffer observation)
+            return d.pending_s + d.breakdown_for(cost, policy, shape_key).offload_s
+
+        return min(devices, key=lambda d: (completion(d), d.device_id))
+
+    return select
+
+
+SCHEDULERS: Dict[str, Callable[[], Callable]] = {
+    "round-robin": _round_robin,
+    "least-loaded": _least_loaded,
+    "cost-aware": _cost_aware,
+}
+
+
+class HeroCluster:
+    """Host-side orchestrator for N virtual PMCA devices (singleton)."""
+
+    def __init__(
+        self,
+        num_devices: int = 1,
+        platform: Platform = TPU_V5E,
+        scheduler: str = "least-loaded",
+    ) -> None:
+        self.platform = platform
+        self.policy = OffloadPolicy()
+        self._scheduler_name = ""
+        self._select: Optional[Callable] = None
+        self._pinned: Optional[VirtualDevice] = None
+        self.devices: List[VirtualDevice] = []
+        self.resize(num_devices)
+        self.set_scheduler(scheduler)
+
+    # ---- topology ---------------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    def resize(self, num_devices: int) -> None:
+        if num_devices < 1:
+            raise ValueError(f"cluster needs >= 1 device, got {num_devices}")
+        self.devices = [
+            VirtualDevice(i, self.platform) for i in range(num_devices)
+        ]
+
+    def set_scheduler(self, name: str) -> None:
+        if name not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {name!r}; have {sorted(SCHEDULERS)}"
+            )
+        self._scheduler_name = name
+        self._select = SCHEDULERS[name]()
+
+    @property
+    def scheduler(self) -> str:
+        return self._scheduler_name
+
+    def set_platform(self, platform: Platform) -> None:
+        self.platform = platform
+        for d in self.devices:
+            d.platform = platform
+
+    def alive_devices(self) -> List[VirtualDevice]:
+        return [d for d in self.devices if d.alive]
+
+    def device(self, device_id: int) -> VirtualDevice:
+        return self.devices[device_id]
+
+    # ---- lifecycle --------------------------------------------------------
+    def boot(self) -> None:
+        for d in self.alive_devices():
+            d.boot()
+
+    def reset(self) -> None:
+        for d in self.devices:
+            d.reset()
+        if self._select is not None:
+            self.set_scheduler(self._scheduler_name)  # fresh RR counter
+
+    @property
+    def booted(self) -> bool:
+        return any(d.booted for d in self.devices)
+
+    # ---- residency (cluster-wide convenience; per-device via .device()) ---
+    def mark_resident(self, name: str, device_id: Optional[int] = None) -> None:
+        """Pin a logical buffer: one device, or all alive devices (None)."""
+        targets = (
+            [self.devices[device_id]] if device_id is not None
+            else self.alive_devices()
+        )
+        for d in targets:
+            d.mark_resident(name)
+
+    def evict(self, name: str, device_id: Optional[int] = None) -> None:
+        targets = (
+            [self.devices[device_id]] if device_id is not None
+            else self.devices
+        )
+        for d in targets:
+            d.evict(name)
+
+    def is_resident(self, name: str, device_id: Optional[int] = None) -> bool:
+        if device_id is not None:
+            return self.devices[device_id].is_resident(name)
+        return any(d.is_resident(name) for d in self.alive_devices())
+
+    # ---- fault tolerance --------------------------------------------------
+    def fail_device(self, device_id: int) -> List[Tuple[LaunchTicket, int]]:
+        """Device loss: evict + reschedule its in-flight work.
+
+        Returns ``[(ticket, new_device_id), ...]`` — each orphaned launch
+        re-placed on a surviving device through the active scheduler.
+        """
+        survivors = [
+            d for d in self.alive_devices() if d.device_id != device_id
+        ]
+        if not survivors:
+            raise RuntimeError("all devices failed; no reschedule target")
+        orphans = self.devices[device_id].fail()
+        moved: List[Tuple[LaunchTicket, int]] = []
+        for t in orphans:
+            cost = OpCost(op=t.op, flops=0.0, staged_bytes=0.0, touched_bytes=0.0)
+            target = self._select(survivors, cost, self.policy, t.shape_key)
+            if not target.booted:
+                target.boot()
+            target.enqueue(t)
+            moved.append((t, target.device_id))
+        return moved
+
+    def restore_device(self, device_id: int) -> None:
+        """Bring a failed device back (cold: empty ledger, unbooted)."""
+        self.devices[device_id].reset()
+
+    @contextlib.contextmanager
+    def pin_device(self, device_id: int) -> Iterator[VirtualDevice]:
+        """Force every launch in the scope onto one device.
+
+        Batch-level consumers place a unit of work with :meth:`assign` and
+        then execute it under this pin, so the fine-grained launches the
+        work issues land on — and are traced against — its assigned lane.
+        The pin only affects *placement* of new launches; failure
+        rescheduling (:meth:`fail_device`) always goes through the real
+        scheduler over the survivors.
+        """
+        dev = self.devices[device_id]
+        if not dev.alive:
+            raise RuntimeError(f"device {device_id} is failed")
+        saved = self._pinned
+        self._pinned = dev
+        try:
+            yield dev
+        finally:
+            self._pinned = saved
+
+    def _pick(
+        self, cost: OpCost, shape_key: str
+    ) -> VirtualDevice:
+        """Placement for one new launch: the pinned device if any, else the
+        scheduler's choice over the alive devices."""
+        if self._pinned is not None:
+            if not self._pinned.alive:
+                raise RuntimeError(
+                    f"pinned device {self._pinned.device_id} failed mid-scope"
+                )
+            return self._pinned
+        alive = self.alive_devices()
+        if not alive:
+            raise RuntimeError("no alive devices in cluster")
+        return self._select(alive, cost, self.policy, shape_key)
+
+    def assign(self, cost: OpCost, shape_key: str) -> int:
+        """Place one unit of work (e.g. a serving batch) on a device.
+
+        Scheduler-driven placement without an offload record: boots the
+        chosen device, enqueues a ticket for its modeled time, and returns
+        the device id.  Used by batch-level consumers (``launch/serve.py``)
+        that account their work through their own traces.
+        """
+        dev = self._pick(cost, shape_key)
+        if not dev.booted:
+            dev.boot()
+        bd = dev.breakdown_for(cost, self.policy, shape_key)
+        dev.enqueue(
+            LaunchTicket(op=cost.op, shape_key=shape_key, offload_s=bd.offload_s)
+        )
+        return dev.device_id
+
+    # ---- modeled completion ----------------------------------------------
+    def sync(self) -> int:
+        """Retire every in-flight launch (modeled barrier). Returns count."""
+        return sum(d.retire_all() for d in self.devices)
 
     # ---- the offload decision + bookkeeping -------------------------------
     def launch(
@@ -107,11 +450,12 @@ class HeroEngine:
         pallas_eligible: bool = False,
         force_host: bool = False,
         note: str = "",
-    ) -> str:
-        """Route one BLAS call. Returns the chosen backend name.
+    ) -> LaunchResult:
+        """Route one BLAS call.  Returns backend + device placement.
 
         Called at trace time from ``repro.core.blas``; side effect is one
-        :class:`accounting.OffloadRecord` on the active trace (if any).
+        :class:`accounting.OffloadRecord` on the active trace (if any) and
+        one :class:`LaunchTicket` on the chosen device's in-flight queue.
         """
         pol = self.policy
         pol.validate()
@@ -127,9 +471,10 @@ class HeroEngine:
                     op=cost.op, shape_key=shape_key, dtype=dtype,
                     backend="host", cost=cost, regions=bd,
                     zero_copy=pol.zero_copy, note=note or "host-only op",
+                    device_id=HOST_DEVICE_ID,
                 )
             )
-            return "host"
+            return LaunchResult("host")
         if pol.mode == "host":
             offload = False
             bd = breakdown(
@@ -154,8 +499,20 @@ class HeroEngine:
                 resident_fraction=pol.resident_fraction,
                 min_speedup=pol.min_speedup,
             )
-        if offload and not self._booted:
-            self.boot()  # first offload boots the device, as in HeroSDK
+
+        device_id = HOST_DEVICE_ID
+        if offload:
+            dev = self._pick(cost, shape_key)
+            device_id = dev.device_id
+            if not dev.booted:
+                dev.boot()  # first offload boots the device, as in HeroSDK
+            # residency affinity credit on the chosen device
+            if dev.is_resident(shape_key):
+                bd = dev.breakdown_for(cost, pol, shape_key)
+            dev.enqueue(
+                LaunchTicket(op=cost.op, shape_key=shape_key,
+                             offload_s=bd.offload_s)
+            )
 
         if not offload:
             backend = "host"
@@ -173,25 +530,30 @@ class HeroEngine:
                 regions=bd,
                 zero_copy=pol.zero_copy,
                 note=note,
+                device_id=device_id,
             )
         )
-        return backend
+        return LaunchResult(backend, device_id)
 
 
-# Singleton engine — the process's one "device".
-_ENGINE = HeroEngine()
+# Back-compat alias: the single-PMCA engine is a 1-device cluster.
+HeroEngine = HeroCluster
+
+# Singleton cluster — the process's host-side orchestrator.
+_ENGINE = HeroCluster()
 
 
-def engine() -> HeroEngine:
+def engine() -> HeroCluster:
     return _ENGINE
 
 
 class offload_policy:
-    """Context manager to scope policy/platform changes.
+    """Context manager to scope policy/platform/topology changes.
 
     ::
 
-        with offload_policy(mode="auto", platform="hesoc-vcu128"):
+        with offload_policy(mode="auto", platform="hesoc-vcu128",
+                            num_devices=4, scheduler="cost-aware"):
             ...
     """
 
@@ -205,6 +567,8 @@ class offload_policy:
         resident_fraction: Optional[float] = None,
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        num_devices: Optional[int] = None,
+        scheduler: Optional[str] = None,
     ) -> None:
         self._overrides = {
             k: v
@@ -219,16 +583,26 @@ class offload_policy:
             if v is not None
         }
         self._platform = get_platform(platform) if platform else None
+        self._num_devices = num_devices
+        self._scheduler = scheduler
         self._saved_policy: Optional[OffloadPolicy] = None
         self._saved_platform: Optional[Platform] = None
+        self._saved_devices: Optional[List[VirtualDevice]] = None
+        self._saved_scheduler: Optional[str] = None
 
-    def __enter__(self) -> HeroEngine:
+    def __enter__(self) -> HeroCluster:
         eng = engine()
         self._saved_policy = dataclasses.replace(eng.policy)
         self._saved_platform = eng.platform
+        self._saved_devices = eng.devices
+        self._saved_scheduler = eng.scheduler
         eng.policy = dataclasses.replace(eng.policy, **self._overrides)
         if self._platform is not None:
-            eng.platform = self._platform
+            eng.set_platform(self._platform)
+        if self._num_devices is not None:
+            eng.resize(self._num_devices)
+        if self._scheduler is not None:
+            eng.set_scheduler(self._scheduler)
         return eng
 
     def __exit__(self, *exc) -> None:
@@ -236,3 +610,10 @@ class offload_policy:
         assert self._saved_policy is not None
         eng.policy = self._saved_policy
         eng.platform = self._saved_platform
+        eng.devices = self._saved_devices
+        for d in eng.devices:
+            d.platform = self._saved_platform
+        if self._scheduler is not None:
+            # only rebuild when overridden — rebuilding resets stateful
+            # schedulers (round-robin's counter) in the outer scope
+            eng.set_scheduler(self._saved_scheduler)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 __all__ = ["ssd_chunk_diag"]
 
 
@@ -77,7 +79,7 @@ def ssd_chunk_diag(
         ],
         out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, nc, q, p), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

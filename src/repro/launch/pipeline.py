@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = ["pipeline_apply"]
 
 
@@ -73,7 +75,7 @@ def pipeline_apply(
         outs = jnp.where(idx == s - 1, outs, 0.0)
         return jax.lax.psum(outs, axis)                   # broadcast result
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(

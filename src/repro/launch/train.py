@@ -35,7 +35,7 @@ def train(
     seq_len: int = 128,
     ckpt_dir: str = "/tmp/repro_ckpt",
     ckpt_every: int = 20,
-    peak_lr: float = 3e-4,
+    peak_lr: float | None = None,
     compress_grads: bool = False,
     resume: bool = True,
     log_every: int = 10,
@@ -48,6 +48,12 @@ def train(
         cfg = dataclasses.replace(cfg, num_microbatches=num_microbatches)
     model = build_model(cfg)
     mesh = make_local_mesh()
+    if peak_lr is None:
+        # The reduced smoke models are a few hundred K params; at the
+        # full-size default (3e-4) they move less per step than the
+        # batch-to-batch loss noise of the synthetic stream, so short smoke
+        # runs can't show descent.  Tiny models take a bigger step.
+        peak_lr = 3e-3 if smoke else 3e-4
     opts = TrainOptions(
         peak_lr=peak_lr, warmup_steps=max(steps // 10, 1), total_steps=steps,
         compress_grads=compress_grads,
@@ -94,7 +100,7 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None)  # None: auto by scale
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--no-resume", dest="resume", action="store_false")
     args = ap.parse_args()

@@ -14,6 +14,8 @@ from repro.core.hero import engine
 from repro.models import layers as L
 from repro.sharding.annotate import _ambient_mesh
 
+from repro.compat import shard_map
+
 __all__ = ["init_attention", "attention_block", "decode_attention_block"]
 
 
@@ -114,7 +116,7 @@ def _attention_block_tp(p, x, cfg, positions, window, rope_theta, mesh):
         y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
         return y.astype(xl.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(

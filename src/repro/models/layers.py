@@ -9,6 +9,8 @@ import jax.numpy as jnp
 
 from repro.core import blas
 
+from repro.compat import shard_map
+
 __all__ = [
     "rms_norm",
     "layer_norm",
@@ -173,7 +175,7 @@ def _mlp_block_tp(p, x: jax.Array, kind: str, mesh) -> Optional[jax.Array]:
             y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
             return y.astype(xl.dtype)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(P(dp, None, None), P(None, "model"), P(None, "model"),
                       P("model", None)),
@@ -192,7 +194,7 @@ def _mlp_block_tp(p, x: jax.Array, kind: str, mesh) -> Optional[jax.Array]:
         y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
         return y.astype(xl.dtype) + bd.astype(xl.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_gelu, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, "model"), P("model"),
                   P("model", None), P(None)),

@@ -24,6 +24,8 @@ from repro.core import blas
 from repro.models import layers as L
 from repro.sharding.annotate import constrain
 
+from repro.compat import shard_map
+
 __all__ = ["init_moe", "moe_ffn", "expert_capacity"]
 
 
@@ -261,7 +263,7 @@ def _moe_shard_map(p, xf, cfg, mesh):
         out = jnp.zeros((tij, d), xf_loc.dtype).at[st_].add(contrib)
         return out, aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(tok_spec, P(None, None), P("model", None, None),

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from repro.core import blas
 from repro.models import layers as L
 
+from repro.compat import shard_map
+
 __all__ = ["init_mamba", "mamba_block", "decode_mamba_block", "mamba_state_shapes"]
 
 
@@ -270,7 +272,7 @@ def _mamba_block_tp(p, x, cfg, mesh):
         out = jax.lax.psum(out.astype(psum_cast_dtype(xl.dtype)), "model")
         return out.astype(xl.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(

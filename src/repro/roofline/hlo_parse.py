@@ -51,6 +51,39 @@ _WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 
 
+def _split_operands(operands: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only.
+
+    Modern HLO prints operands with inline types — e.g.
+    ``dot(f32[64,32]{1,0} %a, f32[32,16]{1,0} %b)`` — so commas inside
+    ``[...]`` / ``{...}`` / ``(...)`` are part of a shape, not separators.
+    """
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in operands:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return [p for p in parts if p]
+
+
+def _operand_type(operand: str, shapes: Dict[str, str]) -> str:
+    """Resolve one operand's type string: inline if present, else by name."""
+    if _ARRAY_RE.search(operand):
+        return operand
+    name = operand.split()[-1].lstrip("%") if operand else ""
+    return shapes.get(name, "")
+
+
 def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
     total_b = 0
     for dt, dims in _ARRAY_RE.findall(type_str):
@@ -143,8 +176,10 @@ def _parse_computations(text: str) -> Dict[str, Comp]:
 
         if opcode == "dot":
             res_dims = _dims_of(type_str) or []
-            lhs_name = m.group("operands").split(",")[0].strip().lstrip("%")
-            lhs_dims = _dims_of(shapes.get(lhs_name, "")) or []
+            ops_list = _split_operands(m.group("operands"))
+            lhs_dims = (
+                _dims_of(_operand_type(ops_list[0], shapes)) if ops_list else None
+            ) or []
             cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
             k = 1
             if cdims and lhs_dims:
@@ -158,11 +193,9 @@ def _parse_computations(text: str) -> Dict[str, Comp]:
 
         if opcode not in _SKIP_TRAFFIC_OPS and not opcode.endswith("-done"):
             tb = out_bytes
-            for operand in m.group("operands").split(","):
-                oname = operand.strip().lstrip("%")
-                if oname in shapes:
-                    _, ob = _shape_elems_bytes(shapes[oname])
-                    tb += ob
+            for operand in _split_operands(m.group("operands")):
+                _, ob = _shape_elems_bytes(_operand_type(operand, shapes))
+                tb += ob
             cur.traffic_bytes += tb
     return comps
 

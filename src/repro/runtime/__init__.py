@@ -2,6 +2,8 @@
 
 from repro.runtime.elastic import ElasticPlan, replan
 from repro.runtime.fault_tolerance import (
+    ClusterSupervisor,
+    DeviceLossEvent,
     HeartbeatMonitor,
     StragglerMonitor,
     WorkerFailure,
@@ -9,6 +11,8 @@ from repro.runtime.fault_tolerance import (
 )
 
 __all__ = [
+    "ClusterSupervisor",
+    "DeviceLossEvent",
     "ElasticPlan",
     "replan",
     "HeartbeatMonitor",

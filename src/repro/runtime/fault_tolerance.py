@@ -15,6 +15,11 @@ training loop.  The pieces (all exercised by tests with injected faults):
     per-step durations per host; hosts slower than ``threshold`` × median
     over a window are flagged, and the policy hook decides (log / evict →
     elastic re-shard at the next checkpoint boundary).
+  * **Device loss (cluster)** — ``ClusterSupervisor`` watches the
+    :class:`~repro.core.hero.HeroCluster` through per-device heartbeats; a
+    silent device is declared lost, its residency ledger evicted and its
+    in-flight launches rescheduled onto survivors through the cluster's
+    active scheduler.
 """
 
 from __future__ import annotations
@@ -24,10 +29,14 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.hero import HeroCluster, LaunchTicket
+
 __all__ = [
     "WorkerFailure",
     "HeartbeatMonitor",
     "StragglerMonitor",
+    "ClusterSupervisor",
+    "DeviceLossEvent",
     "run_with_recovery",
 ]
 
@@ -87,6 +96,85 @@ class StragglerMonitor:
         if global_median <= 0:
             return []
         return [h for h, m in med.items() if m > self.threshold * global_median]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLossEvent:
+    """One observed device loss and where its work went."""
+
+    device_id: int
+    rescheduled: Tuple[Tuple[LaunchTicket, int], ...]  # (ticket, new device)
+    evicted_buffers: Tuple[str, ...]
+    # True when no survivor existed: in-flight work was dropped, not moved.
+    total_loss: bool = False
+
+
+@dataclasses.dataclass
+class ClusterSupervisor:
+    """Device-level failure handling for a :class:`HeroCluster`.
+
+    The host heartbeats each virtual PMCA (on real HW: the mailbox/doorbell
+    the HeroSDK runtime already polls).  A device silent past ``timeout_s``
+    is failed: residency evicted, queue rescheduled, event logged.  A later
+    ``recover(device_id)`` brings the device back cold — its ledger stays
+    empty until callers re-pin buffers, so the cost model charges the copy
+    region again, exactly what re-staging after a reset costs.
+    """
+
+    cluster: HeroCluster
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self._last: Dict[int, float] = {
+            d.device_id: now for d in self.cluster.devices
+        }
+        self.events: List[DeviceLossEvent] = []
+
+    def beat(self, device_id: int) -> None:
+        self._last[device_id] = self.clock()
+
+    def silent_devices(self) -> List[int]:
+        now = self.clock()
+        return [
+            d.device_id
+            for d in self.cluster.alive_devices()
+            if now - self._last.get(d.device_id, now) > self.timeout_s
+        ]
+
+    def fail_device(self, device_id: int) -> DeviceLossEvent:
+        """Declare one device lost: evict + reschedule, return the event.
+
+        Losing the *last* device is still recorded (``total_loss=True``,
+        in-flight work dropped) rather than raised — the supervisor's job
+        is to report every loss, not to die partway through a sweep.
+        """
+        dev = self.cluster.device(device_id)
+        evicted = tuple(sorted(dev.resident))
+        try:
+            moved = self.cluster.fail_device(device_id)
+            total_loss = False
+        except RuntimeError:  # no reschedule target: whole cluster is down
+            dev.fail()
+            moved = []
+            total_loss = True
+        ev = DeviceLossEvent(
+            device_id=device_id,
+            rescheduled=tuple(moved),
+            evicted_buffers=evicted,
+            total_loss=total_loss,
+        )
+        self.events.append(ev)
+        return ev
+
+    def poll(self) -> List[DeviceLossEvent]:
+        """Fail every heartbeat-silent device; returns the new events."""
+        return [self.fail_device(d) for d in self.silent_devices()]
+
+    def recover(self, device_id: int) -> None:
+        self.cluster.restore_device(device_id)
+        self._last[device_id] = self.clock()
 
 
 def run_with_recovery(

@@ -23,6 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 __all__ = ["ring_ag_matmul"]
 
 
@@ -35,7 +37,7 @@ def ring_ag_matmul(x_shard: jax.Array, w: jax.Array, axis: str) -> jax.Array:
 
     Must be called inside shard_map with ``axis`` manual.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % n) for i in range(n)]  # ring
 

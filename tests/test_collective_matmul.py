@@ -14,6 +14,7 @@ SCRIPT = textwrap.dedent(
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.sharding.collective_matmul import ring_ag_matmul
 
     N, B, S, D, F = 4, 2, 16, 8, 12
@@ -24,7 +25,7 @@ SCRIPT = textwrap.dedent(
     def local(x_shard, w_loc):
         return ring_ag_matmul(x_shard, w_loc, "model")
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=(P(None, "model", None), P(None, "model")),
                        out_specs=P(None, None, "model"),
                        check_vma=False)

@@ -121,6 +121,7 @@ def test_compressed_psum_over_real_axis():
         import json
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.optim import compressed_psum, init_error_buffer
 
         mesh = jax.make_mesh((4,), ("data",))
@@ -132,7 +133,7 @@ def test_compressed_psum_over_real_axis():
             out, err2 = compressed_psum(grads, err, "data")
             return out["w"], err2["w"]
 
-        fn = jax.shard_map(local, mesh=mesh, in_specs=P("data", None),
+        fn = shard_map(local, mesh=mesh, in_specs=P("data", None),
                            out_specs=(P(None), P("data")),
                            check_vma=False)
         with mesh:
