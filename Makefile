@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: collect check test bench
+.PHONY: collect check test bench bench-smoke ci
 
 # Fast gate: the whole suite must *collect* with zero errors (seconds, not
 # minutes) — catches missing-dependency and import-drift regressions before
@@ -17,3 +17,11 @@ test: check
 
 bench:
 	PYTHONPATH=src:. $(PYTHON) -m benchmarks.cluster_scaling
+
+# Perf trajectory gate: fast modeled sweeps -> BENCH_offload.json (gemm
+# sweep, cluster scaling, serve makespan pinned vs unpinned).
+bench-smoke:
+	PYTHONPATH=src:. $(PYTHON) -m benchmarks.run --smoke
+
+# CI entry point: tier-1 suite, then the perf snapshot.
+ci: check bench-smoke

@@ -1,11 +1,23 @@
 """Benchmark runner — one section per paper table/figure + framework tables.
 
-Prints ``name,us_per_call,derived`` CSV blocks per section.
-Run: PYTHONPATH=src:. python -m benchmarks.run
+Two modes:
+
+* default        — prints ``name,us_per_call,derived`` CSV blocks per
+                   section (the full human-readable sweep).
+* ``--smoke``    — a fast, deterministic subset (modeled numbers only plus
+                   one smoke serve round) written to ``BENCH_offload.json``:
+                   gemm sweep, cluster scaling 1->8, and the serve makespan
+                   of pinned cost-aware vs unpinned round-robin placement.
+                   Runs in CI after ``make check`` (``make ci``), so the
+                   perf trajectory is recorded on every PR.
+
+Run: PYTHONPATH=src:. python -m benchmarks.run [--smoke] [--out PATH]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -14,7 +26,107 @@ def _section(title: str) -> None:
     print(f"\n### {title}", flush=True)
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# --smoke: BENCH_offload.json
+# ---------------------------------------------------------------------------
+
+def _smoke_gemm_sweep() -> list:
+    """Modeled offload decision across square GEMM sizes, both platforms."""
+    from repro.core import HESOC_VCU128, TPU_V5E, breakdown, gemm_cost
+
+    rows = []
+    for n in (128, 256, 512, 1024, 2048):
+        cost = gemm_cost(n, n, n, 4)
+        for plat in (HESOC_VCU128, TPU_V5E):
+            bd = breakdown(cost, plat)
+            rows.append({
+                "n": n,
+                "platform": plat.name,
+                "offload_s": bd.offload_s,
+                "host_s": bd.host_s,
+                "speedup": bd.speedup,
+                "copy_fraction": bd.copy_fraction,
+            })
+    return rows
+
+
+def _smoke_cluster_scaling() -> dict:
+    """Modeled throughput scaling 1 -> 8 PMCAs, per scheduler."""
+    from benchmarks.cluster_scaling import sweep
+
+    out = {}
+    for scheduler in ("round-robin", "least-loaded", "cost-aware"):
+        rows = sweep(scheduler)
+        out[scheduler] = rows
+        base = rows[0]["gflops"]
+        out[scheduler + "_scaling_8dev"] = rows[-1]["gflops"] / base
+    return out
+
+
+def _smoke_serve_makespan() -> dict:
+    """KV-cache placement routing: pinned cost-aware vs unpinned RR."""
+    import numpy as np
+
+    from repro.core.hero import engine, offload_policy
+    from repro.launch.serve import serve_cluster
+
+    rng = np.random.default_rng(0)
+    batches = [
+        [list(rng.integers(1, 200, size=3)) for _ in range(4)]
+        for _ in range(4)
+    ]
+    out = {}
+    for label, scheduler, pin in (
+        ("pinned-cost-aware", "cost-aware", True),
+        ("unpinned-round-robin", "round-robin", False),
+    ):
+        with offload_policy(mode="device", num_devices=2, scheduler=scheduler):
+            engine().reset()
+            res = serve_cluster(
+                "yi-6b", batches, smoke=True, max_new_tokens=2,
+                cache_len=512, pin_caches=pin,
+            )
+        out[label] = {
+            "makespan_s": res.makespan_s,
+            "tokens_per_s": res.tokens_per_s,
+            "d2d_s": res.d2d_s,
+            "restage_s": res.restage_s,
+            "prefill_placements": res.prefill_placements,
+            "decode_placements": res.placements,
+        }
+    out["pinned_speedup"] = (
+        out["unpinned-round-robin"]["makespan_s"]
+        / max(out["pinned-cost-aware"]["makespan_s"], 1e-30)
+    )
+    return out
+
+
+def smoke(out_path: str = "BENCH_offload.json") -> dict:
+    t0 = time.time()
+    summary = {
+        "gemm_sweep": _smoke_gemm_sweep(),
+        "cluster_scaling": _smoke_cluster_scaling(),
+        "serve_makespan": _smoke_serve_makespan(),
+    }
+    summary["elapsed_s"] = time.time() - t0
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2)
+    serve = summary["serve_makespan"]
+    print(
+        f"BENCH_offload: gemm_sweep={len(summary['gemm_sweep'])} rows, "
+        f"cost-aware 8-dev scaling="
+        f"{summary['cluster_scaling']['cost-aware_scaling_8dev']:.2f}x, "
+        f"pinned-vs-unpinned serve speedup={serve['pinned_speedup']:.2f}x "
+        f"-> {out_path} ({summary['elapsed_s']:.1f}s)"
+    )
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# default: the full human-readable sweep
+# ---------------------------------------------------------------------------
+
+def full() -> None:
     t0 = time.time()
 
     _section("paper_fig3 — Figure 3 reproduction (heSoC platform model)")
@@ -52,6 +164,19 @@ def main() -> None:
         print("(no dry-run artifacts found — run `python -m repro.launch.dryrun --all`)")
 
     print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset -> BENCH_offload.json (CI gate)")
+    ap.add_argument("--out", default="BENCH_offload.json",
+                    help="output path for --smoke")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.out)
+    else:
+        full()
 
 
 if __name__ == "__main__":

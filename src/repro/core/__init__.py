@@ -4,8 +4,11 @@ Layers (mirroring the paper's Fig. 2):
   platform    — analytic hardware models (heSoC from the paper, TPU v5e)
   cost_model  — three-region offload cost model (copy / fork-join / compute)
   hero        — offload cluster: N virtual PMCAs, residency ledgers,
-                pluggable scheduler, launch records
-  blas        — the BLAS API every model layer calls
+                device-resident handles, pluggable scheduler, launch records
+  dispatch    — declarative op registry: OffloadOp descriptors + the single
+                cost -> plan -> launch -> lower dispatch path
+  blas        — the BLAS API every model layer calls (thin wrappers over
+                registered descriptors)
   accounting  — per-call offload trace (the paper's Fig. 3 instrumentation,
                 with per-device rollups and an overlap timeline)
 """
@@ -29,8 +32,11 @@ from repro.core.cost_model import (
     gemv_cost,
     syrk_cost,
 )
+from repro.core import dispatch
+from repro.core.dispatch import OffloadOp, registered_ops
 from repro.core.hero import (
     SCHEDULERS,
+    DeviceHandle,
     HeroCluster,
     HeroEngine,
     LaunchResult,
@@ -44,6 +50,10 @@ from repro.core.platform import CPU_HOST, HESOC_VCU128, TPU_V5E, Platform, get_p
 
 __all__ = [
     "blas",
+    "dispatch",
+    "DeviceHandle",
+    "OffloadOp",
+    "registered_ops",
     "OffloadRecord",
     "OffloadTrace",
     "offload_trace",

@@ -63,10 +63,11 @@ class DeviceAggregate:
     compute_s: float = 0.0
     flops: float = 0.0
     staged_bytes: float = 0.0
+    d2d_s: float = 0.0          # inbound pinned-buffer migrations
 
     @property
     def offload_s(self) -> float:
-        return self.copy_s + self.fork_join_s + self.compute_s
+        return self.copy_s + self.fork_join_s + self.compute_s + self.d2d_s
 
 
 @dataclasses.dataclass
@@ -134,7 +135,11 @@ class OffloadTrace:
 
     def summary(self) -> str:
         copy, fork, comp, host = self.totals()
-        off = copy + fork + comp
+        d2d = self.total_d2d_s()
+        # d2d migrations are part of what the offload path pays, so they
+        # belong in the total and the speedup denominator (keeps this line
+        # consistent with the per-device offload_s rollups below).
+        off = copy + fork + comp + d2d
         lines = [
             f"offload trace: {len(self.records)} calls "
             f"({len(self.offloaded())} offloaded, {len(self.host_only())} host)",
@@ -145,6 +150,8 @@ class OffloadTrace:
             lines.append(
                 f"  modeled speedup={host / off:.2f}x   copy fraction={copy / off:.1%}"
             )
+        if d2d > 0:
+            lines.append(f"  d2d migrations={d2d:.6f}s")
         devs = self.by_device()
         if len(devs) > 1 or (devs and next(iter(devs)) != 0):
             for did in sorted(devs):
@@ -176,7 +183,12 @@ class OffloadTrace:
             d.compute_s += r.regions.compute_s * r.count
             d.flops += r.cost.flops * r.count
             d.staged_bytes += r.cost.staged_bytes * r.count
+            d.d2d_s += r.regions.d2d_s * r.count
         return agg
+
+    def total_d2d_s(self) -> float:
+        """Modeled device-to-device migration seconds (pinned-handle moves)."""
+        return sum(r.regions.d2d_s * r.count for r in self.offloaded())
 
     def device_timelines(self) -> Dict[int, DeviceTimeline]:
         """Modeled copy/compute-overlap timeline per device.
@@ -194,7 +206,8 @@ class OffloadTrace:
             serial = 0.0
             for r in recs:
                 n = max(int(round(r.count)), 1)
-                copy = r.regions.copy_s
+                # host staging and d2d migration both occupy the DMA engine
+                copy = r.regions.copy_s + r.regions.d2d_s
                 work = r.regions.fork_join_s + r.regions.compute_s
                 # first repeat explicitly...
                 dma_free += copy

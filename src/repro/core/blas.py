@@ -1,10 +1,23 @@
-"""The BLAS seam — OpenBLAS analogue (paper Fig. 2, box 3).
+"""The BLAS seam — OpenBLAS analogue (paper Fig. 2, box 3), as a declarative
+op registry.
 
 One stable linear-algebra API that *all* higher layers call instead of raw
-``jnp`` contractions.  Each call is scored by the cost model, routed by the
-:class:`~repro.core.hero.HeroEngine` (host / device / device-pallas), and
-recorded on the active offload trace — exactly the role OpenBLAS plays in the
-paper, with the OpenMP ``#pragma omp target`` replaced by backend dispatch.
+``jnp`` contractions.  Every op here is an :class:`~repro.core.dispatch.
+OffloadOp` descriptor — its cost function, Pallas-eligibility predicate,
+host (XLA) lowering and Pallas lowering — registered with
+:mod:`repro.core.dispatch` at import time.  The public functions are thin
+wrappers over the single :func:`~repro.core.dispatch.dispatch` path, which
+scores the call, resolves routing (explicit-TP plan -> Pallas -> host),
+threads the chosen ``device_id`` into the trace record, and runs the
+winning lowering — exactly the role OpenBLAS plays in the paper, with the
+OpenMP ``#pragma omp target`` replaced by the dispatch engine.
+
+Extending the seam is declarative: write the lowerings, build an
+``OffloadOp``, ``register`` it (and add the kernel to
+``repro.kernels.ops.PALLAS_LOWERINGS`` if it has a device form).  No new
+dispatch code — the cost -> plan -> launch -> lower ritual exists once, in
+``core/dispatch.py``, so placement, accounting, and scheduling behave
+identically for every op.
 
 Host path    : ``lax.dot_general`` (XLA default lowering — the "rv64g host
                kernel").
@@ -15,29 +28,32 @@ Pallas path  : hand-tiled MXU kernels from ``repro.kernels`` (the "rv32 PMCA
                kernel"), selected when the policy enables them and the shape
                is tile-eligible.
 
-``syrk`` is host-only by default, mirroring the paper compiling ``syrk.c``
-only for the host.
+``syrk`` is host-only (``host_only=True`` on its descriptor), mirroring the
+paper compiling ``syrk.c`` only for the host.  Callers holding a
+:class:`~repro.core.hero.DeviceHandle` (pinned KV cache, resident weights)
+pass ``handle=`` to any op so schedulers route the work to the data.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import accounting
 from repro.core import cost_model as cm
-from repro.core.hero import engine
+from repro.core.dispatch import OffloadOp, dispatch, register
+from repro.core.hero import DeviceHandle, engine  # noqa: F401 (re-export seam)
 
 __all__ = [
     "gemm",
     "matmul",
     "gemm_batched",
     "linear",
+    "expert_matmul",
     "attention",
+    "attention_math",
     "syrk",
     "gemv",
     "dot",
@@ -56,8 +72,10 @@ _DIRECT_ATTN_MAX_KV = 8192
 _CHUNKED_ATTN_BLOCK = 1024
 
 
-def _shape_key(*arrs) -> str:
-    return ";".join("x".join(map(str, a.shape)) + f":{a.dtype}" for a in arrs)
+def _kops():
+    from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+    return kops
 
 
 def _pallas_gemm_eligible(m: int, n: int, k: int, dtype) -> bool:
@@ -81,44 +99,55 @@ def _accum_dot(a, b, dimension_numbers, out_dtype):
 
 
 # ---------------------------------------------------------------------------
-# Level-3
+# Level-3 descriptors
 # ---------------------------------------------------------------------------
 
-def gemm(
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    transpose_a: bool = False,
-    transpose_b: bool = False,
-    out_dtype=None,
-) -> jax.Array:
-    """C = op(A) @ op(B) for 2-D operands, routed through the offload seam."""
+def _gemm_dims(a, b, transpose_a, transpose_b):
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"gemm takes 2-D operands, got {a.shape} @ {b.shape}")
     m, k = (a.shape[1], a.shape[0]) if transpose_a else a.shape
     kb, n = (b.shape[1], b.shape[0]) if transpose_b else b.shape
     if k != kb:
         raise ValueError(f"gemm contraction mismatch: {a.shape} @ {b.shape}")
+    return m, n, k
+
+
+def _gemm_cost(a, b, *, transpose_a=False, transpose_b=False, out_dtype=None):
+    m, n, k = _gemm_dims(a, b, transpose_a, transpose_b)
+    return cm.gemm_cost(m, n, k, jnp.dtype(a.dtype).itemsize)
+
+
+def _gemm_eligible(a, b, *, transpose_a=False, transpose_b=False, out_dtype=None):
+    m, n, k = _gemm_dims(a, b, transpose_a, transpose_b)
+    return _pallas_gemm_eligible(m, n, k, a.dtype)
+
+
+def _gemm_host(a, b, *, transpose_a=False, transpose_b=False, out_dtype=None):
     out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
-    itemsize = jnp.dtype(a.dtype).itemsize
-
-    cost = cm.gemm_cost(m, n, k, itemsize)
-    backend = engine().launch(
-        cost,
-        dtype=str(a.dtype),
-        shape_key=_shape_key(a, b),
-        pallas_eligible=_pallas_gemm_eligible(m, n, k, a.dtype),
-    )
-    if backend == "device-pallas":
-        from repro.kernels import ops as kops  # lazy: avoid import cycle
-
-        aa = a.T if transpose_a else a
-        bb = b.T if transpose_b else b
-        return kops.gemm(
-            aa, bb, out_dtype=out_dtype, interpret=engine().policy.interpret
-        )
     ca = ((0,) if transpose_a else (1,), (1,) if transpose_b else (0,))
     return _accum_dot(a, b, (ca, ((), ())), out_dtype)
+
+
+def _gemm_pallas(
+    a, b, *, transpose_a=False, transpose_b=False, out_dtype=None,
+    interpret=False,
+):
+    aa = a.T if transpose_a else a
+    bb = b.T if transpose_b else b
+    return _kops().pallas_lowering("gemm")(
+        aa, bb,
+        out_dtype=out_dtype or jnp.result_type(a.dtype, b.dtype),
+        interpret=interpret,
+    )
+
+
+register(OffloadOp(
+    name="gemm",
+    cost=_gemm_cost,
+    host=_gemm_host,
+    pallas=_gemm_pallas,
+    eligible=_gemm_eligible,
+))
 
 
 def _tp_plan(x, w, mode: str):
@@ -203,8 +232,330 @@ def _tp_shard_map_matmul(x, w, mode: str, out_dtype, plan):
     )(x, w)
 
 
+def _matmul_dims(x, w):
+    if w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D rhs, got {w.shape}")
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"matmul contraction mismatch: {x.shape} @ {w.shape}")
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    k, n = w.shape
+    return m, k, n
+
+
+def _matmul_cost(x, w, *, out_dtype=None, tp_mode=None):
+    m, k, n = _matmul_dims(x, w)
+    return cm.gemm_cost(m, n, k, jnp.dtype(x.dtype).itemsize)
+
+
+def _matmul_plan(x, w, *, out_dtype=None, tp_mode=None):
+    # A tensor-parallel matmul runs the shard_map XLA path, so routing must
+    # resolve before the record is written (no phantom Pallas launches).
+    return _tp_plan(x, w, tp_mode) if tp_mode in ("row", "col") else None
+
+
+def _matmul_plan_lower(plan, x, w, *, out_dtype=None, tp_mode=None):
+    return _tp_shard_map_matmul(x, w, tp_mode, out_dtype, plan)
+
+
+def _matmul_eligible(x, w, *, out_dtype=None, tp_mode=None):
+    m, k, n = _matmul_dims(x, w)
+    return _pallas_gemm_eligible(m, n, k, x.dtype)
+
+
+def _matmul_host(x, w, *, out_dtype=None, tp_mode=None):
+    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
+    return _accum_dot(x, w, (((x.ndim - 1,), (0,)), ((), ())), out_dtype)
+
+
+def _matmul_pallas(x, w, *, out_dtype=None, tp_mode=None, interpret=False):
+    m, k, n = _matmul_dims(x, w)
+    out = _kops().pallas_lowering("matmul")(
+        x.reshape(m, k), w,
+        out_dtype=out_dtype or jnp.result_type(x.dtype, w.dtype),
+        interpret=interpret,
+    )
+    return out.reshape(*x.shape[:-1], n)
+
+
+register(OffloadOp(
+    name="matmul",
+    cost=_matmul_cost,
+    host=_matmul_host,
+    pallas=_matmul_pallas,
+    eligible=_matmul_eligible,
+    plan=_matmul_plan,
+    plan_lower=_matmul_plan_lower,
+))
+
+
+def _gemm_batched_cost(a, b, *, out_dtype=None):
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"gemm_batched: bad shapes {a.shape} @ {b.shape}")
+    bsz, m, k = a.shape
+    _, kb, n = b.shape
+    if k != kb:
+        raise ValueError(
+            f"gemm_batched contraction mismatch: {a.shape} @ {b.shape}"
+        )
+    return cm.gemm_cost(
+        m, n, k, jnp.dtype(a.dtype).itemsize, batch=bsz, op="gemm_batched"
+    )
+
+
+def _gemm_batched_eligible(a, b, *, out_dtype=None):
+    _, m, k = a.shape
+    n = b.shape[2]
+    return _pallas_gemm_eligible(m, n, k, a.dtype)
+
+
+def _gemm_batched_host(a, b, *, out_dtype=None):
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+    return _accum_dot(a, b, (((2,), (1,)), ((0,), (0,))), out_dtype)
+
+
+def _gemm_batched_pallas(a, b, *, out_dtype=None, interpret=False):
+    return _kops().pallas_lowering("gemm_batched")(
+        a, b,
+        out_dtype=out_dtype or jnp.result_type(a.dtype, b.dtype),
+        interpret=interpret,
+    )
+
+
+register(OffloadOp(
+    name="gemm_batched",
+    cost=_gemm_batched_cost,
+    host=_gemm_batched_host,
+    pallas=_gemm_batched_pallas,
+    eligible=_gemm_batched_eligible,
+))
+
+
+def _expert_dims(x, w):
+    if w.ndim != 3 or x.shape[0] != w.shape[0] or x.shape[-1] != w.shape[1]:
+        raise ValueError(f"expert_matmul: bad shapes {x.shape} @ {w.shape}")
+    e = x.shape[0]
+    m = 1
+    for dim in x.shape[1:-1]:
+        m *= dim
+    k, n = w.shape[1], w.shape[2]
+    return e, m, k, n
+
+
+def _expert_cost(x, w, *, out_dtype=None):
+    e, m, k, n = _expert_dims(x, w)
+    return cm.gemm_cost(
+        m, n, k, jnp.dtype(x.dtype).itemsize, batch=e, op="moe_gemm"
+    )
+
+
+def _expert_eligible(x, w, *, out_dtype=None):
+    e, m, k, n = _expert_dims(x, w)
+    return _pallas_gemm_eligible(m, n, k, x.dtype)
+
+
+def _expert_host(x, w, *, out_dtype=None):
+    return _accum_dot(
+        x, w, (((x.ndim - 1,), (1,)), ((0,), (0,))),
+        out_dtype or jnp.result_type(x.dtype, w.dtype),
+    )
+
+
+def _expert_pallas(x, w, *, out_dtype=None, interpret=False):
+    e, m, k, n = _expert_dims(x, w)
+    out = _kops().pallas_lowering("moe_gemm")(
+        x.reshape(e, m, k), w, out_dtype=out_dtype or x.dtype,
+        interpret=interpret,
+    )
+    return out.reshape(*x.shape[:-1], n)
+
+
+register(OffloadOp(
+    name="expert_matmul",
+    cost=_expert_cost,
+    host=_expert_host,
+    pallas=_expert_pallas,
+    eligible=_expert_eligible,
+))
+
+
+def _syrk_cost(a, *, out_dtype=None):
+    if a.ndim != 2:
+        raise ValueError(f"syrk takes a 2-D operand, got {a.shape}")
+    n, k = a.shape
+    return cm.syrk_cost(n, k, jnp.dtype(a.dtype).itemsize)
+
+
+def _syrk_host(a, *, out_dtype=None):
+    return _accum_dot(a, a, (((1,), (1,)), ((), ())), out_dtype or a.dtype)
+
+
+register(OffloadOp(
+    name="syrk",
+    cost=_syrk_cost,
+    host=_syrk_host,
+    host_only=True,
+    note="host-only (syrk.c compiled for host, per paper)",
+))
+
+
+def _attention_cost(
+    q, k, v, *, causal=True, window=None, sm_scale=None, kv_mask=None
+):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    static_window = (
+        window if (window is None or isinstance(window, int)) else None
+    )
+    return cm.attention_cost(
+        b, sq, skv, hq, d, jnp.dtype(q.dtype).itemsize,
+        window=static_window if static_window and static_window < skv else None,
+    )
+
+
+def _attention_eligible(
+    q, k, v, *, causal=True, window=None, sm_scale=None, kv_mask=None
+):
+    # The Pallas flash kernel needs a static window (traced per-layer window
+    # patterns fall back to the masked-einsum host path) and no kv_mask.
+    static = window is None or isinstance(window, int)
+    return (
+        static
+        and kv_mask is None
+        and q.shape[-1] >= 8
+        and q.dtype in (jnp.float32, jnp.bfloat16)
+    )
+
+
+def _attention_pallas(
+    q, k, v, *, causal=True, window=None, sm_scale=None, kv_mask=None,
+    interpret=False,
+):
+    skv = k.shape[2]
+    eff_window = None if (window is None or window >= skv) else window
+    return _kops().pallas_lowering("attention")(
+        q, k, v,
+        causal=causal,
+        window=eff_window,
+        sm_scale=sm_scale,
+        interpret=interpret,
+    )
+
+
+def _attention_host(
+    q, k, v, *, causal=True, window=None, sm_scale=None, kv_mask=None
+):
+    return attention_math(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        kv_mask=kv_mask,
+    )
+
+
+register(OffloadOp(
+    name="attention",
+    cost=_attention_cost,
+    host=_attention_host,
+    pallas=_attention_pallas,
+    eligible=_attention_eligible,
+))
+
+
+# ---------------------------------------------------------------------------
+# Level-2 / Level-1 descriptors (host lowering only; still scored + routed,
+# so traces show whether the decision model would offload them)
+# ---------------------------------------------------------------------------
+
+def _gemv_cost(a, x, *, out_dtype=None):
+    if a.ndim != 2 or x.ndim != 1 or a.shape[1] != x.shape[0]:
+        raise ValueError(f"gemv: bad shapes {a.shape} @ {x.shape}")
+    m, n = a.shape
+    return cm.gemv_cost(m, n, jnp.dtype(a.dtype).itemsize)
+
+
+def _gemv_host(a, x, *, out_dtype=None):
+    out_dtype = out_dtype or jnp.result_type(a.dtype, x.dtype)
+    return _accum_dot(a, x, (((1,), (0,)), ((), ())), out_dtype)
+
+
+register(OffloadOp(name="gemv", cost=_gemv_cost, host=_gemv_host))
+
+
+def _dot_cost(x, y):
+    if x.shape != y.shape or x.ndim != 1:
+        raise ValueError(f"dot: bad shapes {x.shape}, {y.shape}")
+    return cm.vector_cost("dot", x.shape[0], jnp.dtype(x.dtype).itemsize)
+
+
+def _dot_host(x, y):
+    return jnp.sum(
+        x.astype(jnp.float32) * y.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+register(OffloadOp(name="dot", cost=_dot_cost, host=_dot_host))
+
+
+def _axpy_cost(alpha, x, y):
+    return cm.vector_cost("axpy", x.size, jnp.dtype(x.dtype).itemsize)
+
+
+def _axpy_host(alpha, x, y):
+    return alpha * x + y
+
+
+register(OffloadOp(name="axpy", cost=_axpy_cost, host=_axpy_host))
+
+
+def _scal_cost(alpha, x):
+    return cm.vector_cost("scal", x.size, jnp.dtype(x.dtype).itemsize, 1.0)
+
+
+def _scal_host(alpha, x):
+    return alpha * x
+
+
+register(OffloadOp(name="scal", cost=_scal_cost, host=_scal_host))
+
+
+def _nrm2_cost(x):
+    return cm.vector_cost("nrm2", x.size, jnp.dtype(x.dtype).itemsize)
+
+
+def _nrm2_host(x):
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)))).astype(x.dtype)
+
+
+register(OffloadOp(name="nrm2", cost=_nrm2_cost, host=_nrm2_host))
+
+
+# ---------------------------------------------------------------------------
+# Public API — thin wrappers over dispatch()
+# ---------------------------------------------------------------------------
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+    out_dtype=None,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
+    """C = op(A) @ op(B) for 2-D operands, routed through the offload seam."""
+    return dispatch(
+        "gemm", a, b, transpose_a=transpose_a, transpose_b=transpose_b,
+        out_dtype=out_dtype, handle=handle,
+    )
+
+
 def matmul(
-    x: jax.Array, w: jax.Array, *, out_dtype=None, tp_mode: Optional[str] = None
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    tp_mode: Optional[str] = None,
+    handle: Optional[DeviceHandle] = None,
 ) -> jax.Array:
     """General (leading-batch, k) @ (k, n) — the framework's workhorse.
 
@@ -213,42 +564,9 @@ def matmul(
     opts into the explicit tensor-parallel path with bf16 reductions when an
     ambient mesh allows it (§Perf hillclimb #2).
     """
-    if w.ndim != 2:
-        raise ValueError(f"matmul expects 2-D rhs, got {w.shape}")
-    if x.shape[-1] != w.shape[0]:
-        raise ValueError(f"matmul contraction mismatch: {x.shape} @ {w.shape}")
-    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
-    m = 1
-    for d in x.shape[:-1]:
-        m *= d
-    k, n = w.shape
-    itemsize = jnp.dtype(x.dtype).itemsize
-
-    cost = cm.gemm_cost(m, n, k, itemsize)
-    # Resolve routing BEFORE recording: a tensor-parallel matmul runs the
-    # shard_map XLA path, so it must not be recorded (or queued) as a
-    # Pallas launch that never executes.
-    plan = _tp_plan(x, w, tp_mode) if tp_mode in ("row", "col") else None
-    backend, device_id = engine().launch(
-        cost,
-        dtype=str(x.dtype),
-        shape_key=_shape_key(x, w),
-        pallas_eligible=(
-            plan is None and _pallas_gemm_eligible(m, n, k, x.dtype)
-        ),
-        note="tp-shard-map" if plan is not None else "",
+    return dispatch(
+        "matmul", x, w, out_dtype=out_dtype, tp_mode=tp_mode, handle=handle
     )
-    if plan is not None:
-        return _tp_shard_map_matmul(x, w, tp_mode, out_dtype, plan)
-    if backend == "device-pallas":
-        from repro.kernels import ops as kops
-
-        x2 = x.reshape(m, k)
-        out = kops.gemm(
-            x2, w, out_dtype=out_dtype, interpret=engine().policy.interpret
-        )
-        return out.reshape(*x.shape[:-1], n)
-    return _accum_dot(x, w, (((x.ndim - 1,), (0,)), ((), ())), out_dtype)
 
 
 def gemm_batched(
@@ -256,31 +574,10 @@ def gemm_batched(
     b: jax.Array,
     *,
     out_dtype=None,
+    handle: Optional[DeviceHandle] = None,
 ) -> jax.Array:
     """(B, m, k) @ (B, k, n) batched GEMM (attention scores/values)."""
-    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
-        raise ValueError(f"gemm_batched: bad shapes {a.shape} @ {b.shape}")
-    bsz, m, k = a.shape
-    _, kb, n = b.shape
-    if k != kb:
-        raise ValueError(f"gemm_batched contraction mismatch: {a.shape} @ {b.shape}")
-    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
-    itemsize = jnp.dtype(a.dtype).itemsize
-
-    cost = cm.gemm_cost(m, n, k, itemsize, batch=bsz, op="gemm_batched")
-    backend = engine().launch(
-        cost,
-        dtype=str(a.dtype),
-        shape_key=_shape_key(a, b),
-        pallas_eligible=_pallas_gemm_eligible(m, n, k, a.dtype),
-    )
-    if backend == "device-pallas":
-        from repro.kernels import ops as kops
-
-        return kops.gemm_batched(
-            a, b, out_dtype=out_dtype, interpret=engine().policy.interpret
-        )
-    return _accum_dot(a, b, (((2,), (1,)), ((0,), (0,))), out_dtype)
+    return dispatch("gemm_batched", a, b, out_dtype=out_dtype, handle=handle)
 
 
 def linear(
@@ -298,58 +595,24 @@ def linear(
     return y
 
 
-def expert_matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
+def expert_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
     """(E, ..., d) @ (E, d, f) -> (E, ..., f) — expert-batched contraction.
 
     Keeps all free dims intact (no reshape): merging a sharded dim in a
     reshape forces GSPMD to all-gather, so MoE keeps its (E, G, C, d)
     layout 4-D through the expert GEMMs."""
-    if w.ndim != 3 or x.shape[0] != w.shape[0] or x.shape[-1] != w.shape[1]:
-        raise ValueError(f"expert_matmul: bad shapes {x.shape} @ {w.shape}")
-    e = x.shape[0]
-    m = 1
-    for dim in x.shape[1:-1]:
-        m *= dim
-    k, n = w.shape[1], w.shape[2]
-    itemsize = jnp.dtype(x.dtype).itemsize
-    cost = cm.gemm_cost(m, n, k, itemsize, batch=e, op="moe_gemm")
-    backend = engine().launch(
-        cost,
-        dtype=str(x.dtype),
-        shape_key=_shape_key(x, w),
-        pallas_eligible=_pallas_gemm_eligible(m, n, k, x.dtype),
-    )
-    if backend == "device-pallas":
-        from repro.kernels import ops as kops
-
-        x3 = x.reshape(e, m, k)
-        out = kops.moe_gemm(
-            x3, w, out_dtype=out_dtype or x.dtype,
-            interpret=engine().policy.interpret,
-        )
-        return out.reshape(*x.shape[:-1], n)
-    return _accum_dot(
-        x, w, (((x.ndim - 1,), (1,)), ((0,), (0,))),
-        out_dtype or jnp.result_type(x.dtype, w.dtype),
-    )
+    return dispatch("expert_matmul", x, w, out_dtype=out_dtype, handle=handle)
 
 
 def syrk(a: jax.Array, *, out_dtype=None) -> jax.Array:
     """C = A @ A.T — host-only, as in the paper's build."""
-    if a.ndim != 2:
-        raise ValueError(f"syrk takes a 2-D operand, got {a.shape}")
-    n, k = a.shape
-    out_dtype = out_dtype or a.dtype
-    cost = cm.syrk_cost(n, k, jnp.dtype(a.dtype).itemsize)
-    engine().launch(
-        cost,
-        dtype=str(a.dtype),
-        shape_key=_shape_key(a),
-        pallas_eligible=False,
-        force_host=True,
-        note="host-only (syrk.c compiled for host, per paper)",
-    )
-    return _accum_dot(a, a, (((1,), (1,)), ((), ())), out_dtype)
+    return dispatch("syrk", a, out_dtype=out_dtype)
 
 
 def attention(
@@ -361,6 +624,7 @@ def attention(
     window=None,
     sm_scale: Optional[float] = None,
     kv_mask: Optional[jax.Array] = None,
+    handle: Optional[DeviceHandle] = None,
 ) -> jax.Array:
     """Fused attention through the offload seam.
 
@@ -369,45 +633,11 @@ def attention(
     the Pallas flash kernel requires a static window, so traced windows fall
     back to the masked-einsum host path (still fully shardable).
     Queries align to the end of kv when Sq < Skv (decode / suffix).
+    ``handle`` pins the call to a device-resident buffer (e.g. a KV cache).
     """
-    b, hq, sq, d = q.shape
-    _, hkv, skv, _ = k.shape
-    static_window = window if (window is None or isinstance(window, int)) else None
-    itemsize = jnp.dtype(q.dtype).itemsize
-    cost = cm.attention_cost(
-        b, sq, skv, hq, d, itemsize,
-        window=static_window if static_window and static_window < skv else None,
-    )
-    backend = engine().launch(
-        cost,
-        dtype=str(q.dtype),
-        shape_key=_shape_key(q, k),
-        pallas_eligible=(
-            static_window is not None or window is None
-        ) and kv_mask is None and d >= 8 and q.dtype in (jnp.float32, jnp.bfloat16),
-    )
-    if (
-        backend == "device-pallas"
-        and (window is None or isinstance(window, int))
-        and kv_mask is None
-    ):
-        from repro.kernels import ops as kops
-
-        eff_window = None if (window is None or window >= skv) else window
-        return kops.flash_attention(
-            q, k, v,
-            causal=causal,
-            window=eff_window,
-            sm_scale=sm_scale,
-            interpret=engine().policy.interpret,
-        )
-    # Host path (shardable, GQA-aware, fp32 softmax). Short kv: one masked
-    # einsum. Long kv: chunked online-softmax scan over kv blocks, so the
-    # (Sq, Skv) score matrix is never materialized (pure-JAX flash attention
-    # — the same VMEM discipline the Pallas kernel encodes, one level up).
-    return attention_math(
-        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
-        kv_mask=kv_mask,
+    return dispatch(
+        "attention", q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        kv_mask=kv_mask, handle=handle,
     )
 
 
@@ -498,41 +728,27 @@ def attention_math(
     return out.astype(q.dtype)
 
 
-# ---------------------------------------------------------------------------
-# Level-2 / Level-1
-# ---------------------------------------------------------------------------
-
-def gemv(a: jax.Array, x: jax.Array, *, out_dtype=None) -> jax.Array:
-    if a.ndim != 2 or x.ndim != 1 or a.shape[1] != x.shape[0]:
-        raise ValueError(f"gemv: bad shapes {a.shape} @ {x.shape}")
-    m, n = a.shape
-    out_dtype = out_dtype or jnp.result_type(a.dtype, x.dtype)
-    cost = cm.gemv_cost(m, n, jnp.dtype(a.dtype).itemsize)
-    engine().launch(cost, dtype=str(a.dtype), shape_key=_shape_key(a, x))
-    return _accum_dot(a, x, (((1,), (0,)), ((), ())), out_dtype)
+def gemv(
+    a: jax.Array,
+    x: jax.Array,
+    *,
+    out_dtype=None,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
+    return dispatch("gemv", a, x, out_dtype=out_dtype, handle=handle)
 
 
 def dot(x: jax.Array, y: jax.Array) -> jax.Array:
-    if x.shape != y.shape or x.ndim != 1:
-        raise ValueError(f"dot: bad shapes {x.shape}, {y.shape}")
-    cost = cm.vector_cost("dot", x.shape[0], jnp.dtype(x.dtype).itemsize)
-    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x, y))
-    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)).astype(x.dtype)
+    return dispatch("dot", x, y)
 
 
 def axpy(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
-    cost = cm.vector_cost("axpy", x.size, jnp.dtype(x.dtype).itemsize)
-    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x, y))
-    return alpha * x + y
+    return dispatch("axpy", alpha, x, y)
 
 
 def scal(alpha, x: jax.Array) -> jax.Array:
-    cost = cm.vector_cost("scal", x.size, jnp.dtype(x.dtype).itemsize, 1.0)
-    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x))
-    return alpha * x
+    return dispatch("scal", alpha, x)
 
 
 def nrm2(x: jax.Array) -> jax.Array:
-    cost = cm.vector_cost("nrm2", x.size, jnp.dtype(x.dtype).itemsize)
-    engine().launch(cost, dtype=str(x.dtype), shape_key=_shape_key(x))
-    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)))).astype(x.dtype)
+    return dispatch("nrm2", x)

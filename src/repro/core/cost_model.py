@@ -27,6 +27,8 @@ __all__ = [
     "gemv_cost",
     "vector_cost",
     "attention_cost",
+    "d2d_cost",
+    "d2d_breakdown",
     "decide_offload",
 ]
 
@@ -44,16 +46,23 @@ class OpCost:
 
 @dataclasses.dataclass(frozen=True)
 class RegionBreakdown:
-    """The paper's Figure-3 decomposition for one call."""
+    """The paper's Figure-3 decomposition for one call.
+
+    ``d2d_s`` is a fourth region introduced for the cluster: device-to-device
+    traffic when a pinned (resident) buffer migrates between PMCAs.  It rides
+    the DMA engine like the host copy region, so the overlap timeline treats
+    both as copy-stream work.
+    """
 
     copy_s: float
     fork_join_s: float
     compute_s: float
     host_s: float           # host-only alternative
+    d2d_s: float = 0.0      # device-to-device migration traffic
 
     @property
     def offload_s(self) -> float:
-        return self.copy_s + self.fork_join_s + self.compute_s
+        return self.copy_s + self.fork_join_s + self.compute_s + self.d2d_s
 
     @property
     def speedup(self) -> float:
@@ -62,6 +71,28 @@ class RegionBreakdown:
     @property
     def copy_fraction(self) -> float:
         return self.copy_s / self.offload_s if self.offload_s > 0 else 0.0
+
+
+def d2d_cost(nbytes: float, *, op: str = "d2d_copy") -> OpCost:
+    """Workload of migrating one resident buffer device-to-device."""
+    nbytes = float(nbytes)
+    return OpCost(op=op, flops=0.0, staged_bytes=nbytes, touched_bytes=nbytes)
+
+
+def d2d_breakdown(nbytes: float, platform: Platform) -> RegionBreakdown:
+    """Score a pinned-buffer migration on ``platform``.
+
+    The transfer occupies the DMA stream (``d2d_s``), plus one fork/join for
+    the transfer descriptors.  ``host_s`` is the alternative the ROADMAP item
+    calls out: dropping the buffer and re-staging it from host memory.
+    """
+    return RegionBreakdown(
+        copy_s=0.0,
+        fork_join_s=platform.t_fork_join(),
+        compute_s=0.0,
+        host_s=platform.t_copy(float(nbytes)),
+        d2d_s=platform.t_d2d(float(nbytes)),
+    )
 
 
 # ---------------------------------------------------------------------------

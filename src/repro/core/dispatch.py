@@ -1,0 +1,175 @@
+"""Declarative offload-op registry — one dispatch path for every BLAS op.
+
+The paper's architecture is a *single* stable seam (OpenBLAS behind
+``#pragma omp target``) where all offload decisions live.  Before this
+module, each op in ``repro.core.blas`` hand-rolled the same ritual —
+score the call, ask the engine for a backend, branch to a lowering,
+record the trace — and the copies had drifted (some dropped the device
+placement, some never could go to Pallas).  Here the ritual exists once:
+
+* an :class:`OffloadOp` *describes* an op — how to cost it, how to lower
+  it on the host (XLA) path, how to lower it through the hand-written
+  Pallas kernels, when the Pallas form is legal, and whether the op is
+  host-only (the paper compiles ``syrk.c`` for the host alone);
+* :func:`register` puts the descriptor in the process-wide table;
+* :func:`dispatch` is the engine: it resolves routing (explicit-TP plan
+  -> Pallas -> host) *before* recording, threads the chosen ``device_id``
+  into every trace record via :meth:`HeroCluster.launch`, and runs the
+  winning lowering.
+
+Adding an op to the seam is now declarative: write its lowerings, build
+an ``OffloadOp``, ``register`` it — no new dispatch code.  Callers that
+hold a :class:`~repro.core.hero.DeviceHandle` (a device-residency token,
+e.g. a pinned KV cache) pass it through ``dispatch(..., handle=...)`` so
+placement-affine schedulers route the work to the data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.cost_model import OpCost
+from repro.core.hero import DeviceHandle, engine
+
+__all__ = [
+    "DeviceHandle",
+    "OffloadOp",
+    "dispatch",
+    "get_op",
+    "register",
+    "registered_ops",
+]
+
+
+def shape_key(*arrs) -> str:
+    """Canonical static-shape signature of the operands (ledger key)."""
+    return ";".join("x".join(map(str, a.shape)) + f":{a.dtype}" for a in arrs)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadOp:
+    """Descriptor for one op behind the offload seam.
+
+    ``cost``, ``eligible`` and ``plan`` see the op's full call signature
+    (``(*args, **kwargs)``) and must be pure shape-level functions — they
+    run at trace time.  ``cost`` also owns operand validation, so a bad
+    call fails before anything is scheduled or recorded.
+
+    host       — XLA lowering; also serves the plain "device" backend
+                 (residency/accounting distinction, same graph).
+    pallas     — hand-tiled kernel lowering; receives ``interpret=`` from
+                 the active policy.  None => op never takes the Pallas path.
+    eligible   — shape/dtype legality gate for ``pallas`` (tile fit etc.).
+    plan       — optional pre-route inspection (e.g. explicit-TP shard_map
+                 applicability); a non-None plan wins over Pallas and is
+                 lowered by ``plan_lower(plan, *args, **kwargs)``.
+    host_only  — never offloaded (recorded with the host backend).
+    """
+
+    name: str
+    cost: Callable[..., OpCost]
+    host: Callable[..., Any]
+    pallas: Optional[Callable[..., Any]] = None
+    eligible: Optional[Callable[..., bool]] = None
+    plan: Optional[Callable[..., Any]] = None
+    plan_lower: Optional[Callable[..., Any]] = None
+    host_only: bool = False
+    note: str = ""
+
+
+_REGISTRY: Dict[str, OffloadOp] = {}
+
+
+def _descriptor_sig(op: OffloadOp) -> tuple:
+    """Source-level identity of a descriptor (stable across module reloads,
+    where re-executed ``def``s produce fresh function objects)."""
+
+    def fsig(f):
+        if f is None:
+            return None
+        return (getattr(f, "__module__", None), getattr(f, "__qualname__", None))
+
+    return (
+        op.name, op.host_only, op.note,
+        fsig(op.cost), fsig(op.host), fsig(op.pallas),
+        fsig(op.eligible), fsig(op.plan), fsig(op.plan_lower),
+    )
+
+
+def register(op: OffloadOp) -> OffloadOp:
+    """Add a descriptor to the op table.
+
+    Idempotent for the same descriptor, including across ``importlib``
+    reloads of the defining module (functions are compared by
+    module + qualname, not object identity); registering a *different*
+    descriptor under a taken name raises.
+    """
+    prev = _REGISTRY.get(op.name)
+    if (
+        prev is not None
+        and prev != op
+        and _descriptor_sig(prev) != _descriptor_sig(op)
+    ):
+        raise ValueError(f"op {op.name!r} already registered")
+    _REGISTRY[op.name] = op
+    return op
+
+
+def get_op(name: str) -> OffloadOp:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown offload op {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def dispatch(
+    name: str,
+    *args,
+    handle: Optional[DeviceHandle] = None,
+    **kwargs,
+):
+    """Route one registered op through the offload seam and execute it.
+
+    The single cost -> plan -> launch -> lower path every op shares:
+
+    1. ``op.cost(*args, **kwargs)`` validates operands and scores the call;
+    2. ``op.plan`` (if any) resolves special routing *before* the record is
+       written — the trace must name the path that actually runs;
+    3. ``engine().launch`` picks backend + device, records the
+       :class:`~repro.core.accounting.OffloadRecord` (always carrying the
+       placement) and queues the modeled ticket;
+    4. the winning lowering runs: plan > pallas > host.
+    """
+    op = get_op(name)
+    cost = op.cost(*args, **kwargs)
+    arrays = [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]
+    plan = None
+    if op.plan is not None:
+        plan = op.plan(*args, **kwargs)
+    eligible = (
+        plan is None
+        and op.pallas is not None
+        and not op.host_only
+        and (op.eligible is None or bool(op.eligible(*args, **kwargs)))
+    )
+    backend, device_id = engine().launch(
+        cost,
+        dtype=str(arrays[0].dtype) if arrays else "",
+        shape_key=shape_key(*arrays),
+        pallas_eligible=eligible,
+        force_host=op.host_only,
+        note="tp-shard-map" if plan is not None else op.note,
+        handle=handle,
+    )
+    if plan is not None:
+        return op.plan_lower(plan, *args, **kwargs)
+    if backend == "device-pallas":
+        return op.pallas(*args, interpret=engine().policy.interpret, **kwargs)
+    return op.host(*args, **kwargs)

@@ -36,10 +36,18 @@ import itertools
 from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
 from repro.core import accounting
-from repro.core.cost_model import OpCost, RegionBreakdown, breakdown, decide_offload
+from repro.core.cost_model import (
+    OpCost,
+    RegionBreakdown,
+    breakdown,
+    d2d_breakdown,
+    d2d_cost,
+    decide_offload,
+)
 from repro.core.platform import CPU_HOST, Platform, TPU_V5E, get_platform
 
 __all__ = [
+    "DeviceHandle",
     "HeroCluster",
     "HeroEngine",
     "LaunchResult",
@@ -52,6 +60,27 @@ __all__ = [
 ]
 
 HOST_DEVICE_ID = -1
+
+
+@dataclasses.dataclass
+class DeviceHandle:
+    """Residency token for one logical buffer pinned to a device.
+
+    The handle *is* the placement contract: as long as it is valid, the
+    named buffer lives in ``device_id``'s DRAM, launches keyed on it skip
+    the copy region there, and the ``cost-aware`` scheduler is drawn to
+    that device.  Migration (:meth:`HeroCluster.migrate_handle`) moves the
+    buffer over the device-to-device link; device loss invalidates the
+    handle (``device_id`` becomes the host sentinel) until it is re-staged.
+    """
+
+    name: str
+    device_id: int
+    nbytes: float
+
+    @property
+    def valid(self) -> bool:
+        return self.device_id != HOST_DEVICE_ID
 
 
 @dataclasses.dataclass
@@ -278,6 +307,7 @@ class HeroCluster:
         self._select: Optional[Callable] = None
         self._pinned: Optional[VirtualDevice] = None
         self.devices: List[VirtualDevice] = []
+        self._handles: Dict[str, DeviceHandle] = {}
         self.resize(num_devices)
         self.set_scheduler(scheduler)
 
@@ -292,6 +322,7 @@ class HeroCluster:
         self.devices = [
             VirtualDevice(i, self.platform) for i in range(num_devices)
         ]
+        self._handles.clear()       # fresh devices hold nothing yet
 
     def set_scheduler(self, name: str) -> None:
         if name not in SCHEDULERS:
@@ -324,6 +355,7 @@ class HeroCluster:
     def reset(self) -> None:
         for d in self.devices:
             d.reset()
+        self._handles.clear()
         if self._select is not None:
             self.set_scheduler(self._scheduler_name)  # fresh RR counter
 
@@ -354,12 +386,153 @@ class HeroCluster:
             return self.devices[device_id].is_resident(name)
         return any(d.is_resident(name) for d in self.alive_devices())
 
+    # ---- device-resident handles (first-class placement tokens) -----------
+    def pin_handle(
+        self, name: str, nbytes: float, device_id: Optional[int] = None
+    ) -> DeviceHandle:
+        """Pin a logical buffer to one device and return its handle.
+
+        ``device_id=None`` lets the active scheduler choose (so pinning a
+        KV cache at prefill lands on the least-costly lane).  Re-pinning an
+        existing name moves the residency mark to the new home.
+        """
+        if device_id is not None:
+            dev = self.devices[device_id]
+            if not dev.alive:
+                raise RuntimeError(f"cannot pin to failed device {device_id}")
+        else:
+            dev = self._pick(d2d_cost(nbytes, op="pin"), name)
+        old = self._handles.get(name)
+        if old is not None and old.valid and old.device_id != dev.device_id:
+            self.devices[old.device_id].evict(name)
+        if not dev.booted:
+            dev.boot()
+        dev.mark_resident(name)
+        handle = DeviceHandle(name=name, device_id=dev.device_id,
+                              nbytes=float(nbytes))
+        self._handles[name] = handle
+        return handle
+
+    def handle(self, name: str) -> Optional[DeviceHandle]:
+        return self._handles.get(name)
+
+    def handles_on(self, device_id: int) -> List[DeviceHandle]:
+        return [h for h in self._handles.values() if h.device_id == device_id]
+
+    def unstage_handle(self, handle: DeviceHandle) -> None:
+        """Drain a pinned buffer back to host DRAM, keeping the handle known.
+
+        The unstaged handle stays in the ledger (``valid`` becomes False);
+        a later :meth:`restage_handle` pays the host->device copy to bring
+        it back.  This is the "don't pin" serving baseline and the state a
+        handle enters when its device is lost.
+        """
+        if self._handles.get(handle.name) is not handle:
+            raise KeyError(f"unknown handle {handle.name!r}")
+        if handle.valid and handle.device_id < len(self.devices):
+            self.devices[handle.device_id].evict(handle.name)
+        handle.device_id = HOST_DEVICE_ID
+
+    def release_handle(self, handle: DeviceHandle) -> None:
+        if handle.valid and handle.device_id < len(self.devices):
+            self.devices[handle.device_id].evict(handle.name)
+        self._handles.pop(handle.name, None)
+        handle.device_id = HOST_DEVICE_ID
+
+    def migrate_handle(
+        self, handle: DeviceHandle, device_id: int
+    ) -> RegionBreakdown:
+        """Move a pinned buffer to another device over the d2d link.
+
+        Charges the ``d2d_copy`` region on the *destination* lane (its DMA
+        engine receives the bytes) and records it on the active trace, so
+        migrations show up in per-device rollups and the overlap timeline.
+        No-op (zero breakdown) when the handle already lives there.
+        """
+        if self._handles.get(handle.name) is not handle:
+            raise KeyError(f"unknown handle {handle.name!r}")
+        if not handle.valid:
+            raise RuntimeError(
+                f"handle {handle.name!r} is unstaged; use restage_handle()"
+            )
+        if device_id == handle.device_id:
+            return RegionBreakdown(0.0, 0.0, 0.0, 0.0)
+        dst = self.devices[device_id]
+        if not dst.alive:
+            raise RuntimeError(f"cannot migrate to failed device {device_id}")
+        bd = d2d_breakdown(handle.nbytes, self.platform)
+        self.devices[handle.device_id].evict(handle.name)
+        if not dst.booted:
+            dst.boot()
+        dst.mark_resident(handle.name)
+        cost = d2d_cost(handle.nbytes)
+        dst.enqueue(LaunchTicket(op=cost.op, shape_key=handle.name,
+                                 offload_s=bd.offload_s))
+        accounting.record(
+            accounting.OffloadRecord(
+                op=cost.op, shape_key=handle.name, dtype="",
+                backend="device", cost=cost, regions=bd,
+                zero_copy=self.policy.zero_copy,
+                note=f"handle migration {handle.device_id}->{device_id}",
+                device_id=device_id,
+            )
+        )
+        handle.device_id = device_id
+        return bd
+
+    def restage_handle(
+        self, handle: DeviceHandle, device_id: Optional[int] = None
+    ) -> RegionBreakdown:
+        """Re-stage an unstaged handle from host memory onto a device.
+
+        Used after device loss: the dead device's buffers exist only in
+        host DRAM again, so the survivor pays the full host->device copy
+        region (the d2d path needs a live source).
+        """
+        if self._handles.get(handle.name) is not handle:
+            raise KeyError(f"unknown handle {handle.name!r}")
+        cost = d2d_cost(handle.nbytes, op="restage")
+        if device_id is not None:
+            dev = self.devices[device_id]
+            if not dev.alive:
+                raise RuntimeError(
+                    f"cannot restage to failed device {device_id}"
+                )
+        else:
+            dev = self._pick(cost, handle.name)
+        bd = RegionBreakdown(
+            copy_s=self.platform.t_copy(handle.nbytes,
+                                        zero_copy=self.policy.zero_copy),
+            fork_join_s=self.platform.t_fork_join(),
+            compute_s=0.0,
+            host_s=0.0,
+        )
+        if not dev.booted:
+            dev.boot()
+        dev.mark_resident(handle.name)
+        dev.enqueue(LaunchTicket(op=cost.op, shape_key=handle.name,
+                                 offload_s=bd.offload_s))
+        accounting.record(
+            accounting.OffloadRecord(
+                op=cost.op, shape_key=handle.name, dtype="",
+                backend="device", cost=cost, regions=bd,
+                zero_copy=self.policy.zero_copy,
+                note="host re-stage after device loss",
+                device_id=dev.device_id,
+            )
+        )
+        handle.device_id = dev.device_id
+        return bd
+
     # ---- fault tolerance --------------------------------------------------
     def fail_device(self, device_id: int) -> List[Tuple[LaunchTicket, int]]:
         """Device loss: evict + reschedule its in-flight work.
 
         Returns ``[(ticket, new_device_id), ...]`` — each orphaned launch
         re-placed on a surviving device through the active scheduler.
+        Handles homed on the lost device become unstaged (their bytes only
+        exist in host memory now); re-placing them is the supervisor's call
+        (:meth:`restage_handle`), since it costs a full host copy.
         """
         survivors = [
             d for d in self.alive_devices() if d.device_id != device_id
@@ -367,6 +540,8 @@ class HeroCluster:
         if not survivors:
             raise RuntimeError("all devices failed; no reschedule target")
         orphans = self.devices[device_id].fail()
+        for h in self.handles_on(device_id):
+            h.device_id = HOST_DEVICE_ID
         moved: List[Tuple[LaunchTicket, int]] = []
         for t in orphans:
             cost = OpCost(op=t.op, flops=0.0, staged_bytes=0.0, touched_bytes=0.0)
@@ -418,22 +593,35 @@ class HeroCluster:
             raise RuntimeError("no alive devices in cluster")
         return self._select(alive, cost, self.policy, shape_key)
 
-    def assign(self, cost: OpCost, shape_key: str) -> int:
+    def assign(
+        self,
+        cost: OpCost,
+        shape_key: str,
+        handle: Optional[DeviceHandle] = None,
+    ) -> Tuple[int, RegionBreakdown]:
         """Place one unit of work (e.g. a serving batch) on a device.
 
         Scheduler-driven placement without an offload record: boots the
         chosen device, enqueues a ticket for its modeled time, and returns
-        the device id.  Used by batch-level consumers (``launch/serve.py``)
-        that account their work through their own traces.
+        ``(device_id, breakdown)`` — the breakdown is exactly what the
+        ticket was sized with, so callers account lanes with the same
+        numbers the scheduler saw.  Used by batch-level consumers
+        (``launch/serve.py``).  ``handle`` declares a data dependency on a
+        pinned buffer: placement-affine schedulers (``cost-aware``) see the
+        residency credit and are drawn to the device holding it; oblivious
+        ones (``round-robin``) are not.
         """
-        dev = self._pick(cost, shape_key)
+        key = (
+            handle.name if handle is not None and handle.valid else shape_key
+        )
+        dev = self._pick(cost, key)
         if not dev.booted:
             dev.boot()
-        bd = dev.breakdown_for(cost, self.policy, shape_key)
+        bd = dev.breakdown_for(cost, self.policy, key)
         dev.enqueue(
-            LaunchTicket(op=cost.op, shape_key=shape_key, offload_s=bd.offload_s)
+            LaunchTicket(op=cost.op, shape_key=key, offload_s=bd.offload_s)
         )
-        return dev.device_id
+        return dev.device_id, bd
 
     # ---- modeled completion ----------------------------------------------
     def sync(self) -> int:
@@ -450,15 +638,21 @@ class HeroCluster:
         pallas_eligible: bool = False,
         force_host: bool = False,
         note: str = "",
+        handle: Optional[DeviceHandle] = None,
     ) -> LaunchResult:
         """Route one BLAS call.  Returns backend + device placement.
 
-        Called at trace time from ``repro.core.blas``; side effect is one
-        :class:`accounting.OffloadRecord` on the active trace (if any) and
-        one :class:`LaunchTicket` on the chosen device's in-flight queue.
+        Called at trace time from the :mod:`repro.core.dispatch` registry;
+        side effect is one :class:`accounting.OffloadRecord` on the active
+        trace (if any) and one :class:`LaunchTicket` on the chosen device's
+        in-flight queue.  ``handle`` keys scheduling and residency credit on
+        a pinned buffer instead of the operand shapes.
         """
         pol = self.policy
         pol.validate()
+        key = (
+            handle.name if handle is not None and handle.valid else shape_key
+        )
         if force_host:  # ops compiled host-only (paper: syrk.c)
             bd = breakdown(
                 cost,
@@ -502,15 +696,15 @@ class HeroCluster:
 
         device_id = HOST_DEVICE_ID
         if offload:
-            dev = self._pick(cost, shape_key)
+            dev = self._pick(cost, key)
             device_id = dev.device_id
             if not dev.booted:
                 dev.boot()  # first offload boots the device, as in HeroSDK
             # residency affinity credit on the chosen device
-            if dev.is_resident(shape_key):
-                bd = dev.breakdown_for(cost, pol, shape_key)
+            if dev.is_resident(key):
+                bd = dev.breakdown_for(cost, pol, key)
             dev.enqueue(
-                LaunchTicket(op=cost.op, shape_key=shape_key,
+                LaunchTicket(op=cost.op, shape_key=key,
                              offload_s=bd.offload_s)
             )
 
@@ -589,6 +783,7 @@ class offload_policy:
         self._saved_platform: Optional[Platform] = None
         self._saved_devices: Optional[List[VirtualDevice]] = None
         self._saved_scheduler: Optional[str] = None
+        self._saved_handles: Optional[Dict[str, DeviceHandle]] = None
 
     def __enter__(self) -> HeroCluster:
         eng = engine()
@@ -596,6 +791,7 @@ class offload_policy:
         self._saved_platform = eng.platform
         self._saved_devices = eng.devices
         self._saved_scheduler = eng.scheduler
+        self._saved_handles = dict(eng._handles)
         eng.policy = dataclasses.replace(eng.policy, **self._overrides)
         if self._platform is not None:
             eng.set_platform(self._platform)
@@ -613,6 +809,11 @@ class offload_policy:
         eng.devices = self._saved_devices
         for d in eng.devices:
             d.platform = self._saved_platform
+        # handles pinned inside the scope die with it (their devices may be
+        # scoped); residency marks they left on outer devices are evicted
+        for name in set(eng._handles) - set(self._saved_handles):
+            eng.evict(name)
+        eng._handles = self._saved_handles
         if self._scheduler is not None:
             # only rebuild when overridden — rebuilding resets stateful
             # schedulers (round-robin's counter) in the outer scope

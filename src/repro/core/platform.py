@@ -81,6 +81,10 @@ class Platform:
     zero_copy_speedup: float = 7.5
     # Number of chips (for pod-level roofline math).
     chips: int = 1
+    # Device-to-device copy bandwidth, B/s (ticket/cache migration between
+    # PMCAs).  0 means "fall back": ICI if present, else staging through the
+    # host at copy_bw (the heSoC has no direct PMCA-to-PMCA path).
+    d2d_bw: float = 0.0
 
     # ---- region models -------------------------------------------------
     def t_host(self, flops: float) -> float:
@@ -94,6 +98,14 @@ class Platform:
 
     def t_fork_join(self) -> float:
         return self.fork_join_s
+
+    def t_d2d(self, bytes_moved: float) -> float:
+        """Device-to-device transfer time for a migrating resident buffer."""
+        bw = self.d2d_bw or self.ici_bw
+        if bw <= 0:
+            # no direct link: bounce through host staging, paying both hops
+            return 2.0 * bytes_moved / self.copy_bw
+        return bytes_moved / bw
 
     def t_compute(self, flops: float, bytes_touched: float) -> float:
         """Device compute region under a two-term roofline."""
@@ -151,6 +163,7 @@ TPU_V5E = Platform(
     local_mem_bytes=128 * 1024 * 1024,   # VMEM
     ici_bw=50.0e9,                # per link
     zero_copy_speedup=1.0e9,      # resident buffers: staging cost ~ 0
+    d2d_bw=50.0e9,                # cache migration rides the ICI
 )
 
 # CPU host-only platform (this container) — used for interpret-mode runs.

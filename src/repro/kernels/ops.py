@@ -20,12 +20,14 @@ from repro.kernels.gemm import DEFAULT_BLOCK, pallas_gemm, pallas_gemm_batched
 from repro.kernels.ssd_scan import ssd_chunk_diag as _ssd_chunk
 
 __all__ = [
+    "PALLAS_LOWERINGS",
     "gemm",
     "gemm_batched",
     "moe_gemm",
     "flash_attention",
     "flash_decode",
     "ssd_chunk_diag",
+    "pallas_lowering",
 ]
 
 
@@ -127,3 +129,32 @@ def ssd_chunk_diag(
     interpret: bool = False,
 ) -> jax.Array:
     return _ssd_chunk(x, dt_a, b, c, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Lowering table: op name -> Pallas kernel entry point.
+#
+# The device half of the declarative registry (``repro.core.dispatch``): an
+# :class:`OffloadOp` descriptor's ``pallas`` adapter fetches its kernel here
+# by name, so the op table and the kernel table stay in one-to-one view and
+# a new device kernel is wired up by adding one row.
+# ---------------------------------------------------------------------------
+
+PALLAS_LOWERINGS = {
+    "gemm": gemm,
+    "matmul": gemm,                  # leading dims collapse to GEMM m
+    "gemm_batched": gemm_batched,
+    "moe_gemm": moe_gemm,
+    "attention": flash_attention,
+    "decode_attention": flash_decode,
+    "ssd_chunk_diag": ssd_chunk_diag,
+}
+
+
+def pallas_lowering(name: str):
+    try:
+        return PALLAS_LOWERINGS[name]
+    except KeyError:
+        raise KeyError(
+            f"no Pallas lowering for op {name!r}; have {sorted(PALLAS_LOWERINGS)}"
+        ) from None

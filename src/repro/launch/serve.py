@@ -5,11 +5,19 @@ are padded into a batch, prefilled (full forward building the cache via
 teacher-forced decode), then decoded token-by-token with greedy/temperature
 sampling.  The same ``serve_step`` is what the decode dry-run cells lower.
 
-``serve_cluster`` scales the loop to the multi-PMCA engine: concurrent
-request batches are placed on the :class:`~repro.core.hero.HeroCluster`'s
-virtual devices through the active scheduler (tokens-weighted cost), each
-batch's offload trace is tagged with its device, and cluster throughput is
-the modeled-parallel makespan — the max device lane, not the sum.
+``serve_cluster`` scales the loop to the multi-PMCA engine with placement
+as a first-class concept: each batch's prefill is placed by the active
+scheduler, and the KV cache it builds is **pinned** there as a
+:class:`~repro.core.hero.DeviceHandle` (a device-residency token).  Decode
+placement then goes through ``cluster.assign(..., handle=...)`` — the
+``cost-aware`` scheduler sees the residency credit and routes the decode
+batch to the device holding its cache (skipping the modeled copy region);
+placement-oblivious schedulers (``round-robin``) do not, and pay a modeled
+``d2d_copy`` migration when decode lands elsewhere.  The un-pinned baseline
+(``pin_caches=False``) models today's common deployment: the cache drains
+to host DRAM after prefill and decode pays a full host re-stage.  Cluster
+throughput is the modeled-parallel makespan — the max device lane, not the
+sum.
 """
 
 from __future__ import annotations
@@ -24,9 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import accounting
 from repro.core import cost_model as cm
-from repro.core.hero import engine
+from repro.core.hero import DeviceHandle, engine
 from repro.launch.steps import make_serve_step
 from repro.models import build_model
 
@@ -37,6 +44,49 @@ class ServeResult:
     prefill_s: float
     decode_s: float
     tokens_per_s: float
+
+
+def _run_prefill(serve_step, params, cache, prompts: List[List[int]]):
+    """Prefill token-by-token through the decode path (correct for rolling
+    caches and hybrid state; a fused prefill kernel is a perf option)."""
+    bsz = len(prompts)
+    max_prompt = max(len(p) for p in prompts)
+    t0 = time.time()
+    tok = np.zeros((bsz, 1), np.int32)
+    logits = None
+    for t in range(max_prompt):
+        for b, p in enumerate(prompts):
+            tok[b, 0] = p[t] if t < len(p) else 0
+        logits, cache = serve_step(
+            params, cache, jnp.asarray(tok), jnp.int32(t)
+        )
+    return logits, cache, time.time() - t0
+
+
+def _run_decode(
+    serve_step, params, cache, logits, *, start_pos: int,
+    max_new_tokens: int, temperature: float, seed: int,
+):
+    """Greedy/temperature sampling loop from a prefilled cache."""
+    bsz = logits.shape[0]
+    rng = np.random.default_rng(seed)
+    out = np.zeros((bsz, max_new_tokens), np.int32)
+    t0 = time.time()
+    for i in range(max_new_tokens):
+        lf = np.asarray(logits, np.float32)
+        if temperature > 0:
+            p = np.exp((lf - lf.max(-1, keepdims=True)) / temperature)
+            p /= p.sum(-1, keepdims=True)
+            nxt = np.array(
+                [rng.choice(lf.shape[-1], p=p[b]) for b in range(bsz)], np.int32
+            )
+        else:
+            nxt = lf.argmax(-1).astype(np.int32)
+        out[:, i] = nxt
+        logits, cache = serve_step(
+            params, cache, jnp.asarray(nxt[:, None]), jnp.int32(start_pos + i)
+        )
+    return out, cache, time.time() - t0
 
 
 def serve_batch(
@@ -66,37 +116,11 @@ def serve_batch(
     cache = model.init_decode_cache(bsz, cache_len)
     serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
 
-    # Prefill token-by-token through the decode path (correct for rolling
-    # caches and hybrid state; a fused prefill kernel is a perf option).
-    t0 = time.time()
-    tok = np.zeros((bsz, 1), np.int32)
-    logits = None
-    for t in range(max_prompt):
-        for b, p in enumerate(prompts):
-            tok[b, 0] = p[t] if t < len(p) else 0
-        logits, cache = serve_step(
-            params, cache, jnp.asarray(tok), jnp.int32(t)
-        )
-    prefill_s = time.time() - t0
-
-    rng = np.random.default_rng(seed)
-    out = np.zeros((bsz, max_new_tokens), np.int32)
-    t0 = time.time()
-    for i in range(max_new_tokens):
-        lf = np.asarray(logits, np.float32)
-        if temperature > 0:
-            p = np.exp((lf - lf.max(-1, keepdims=True)) / temperature)
-            p /= p.sum(-1, keepdims=True)
-            nxt = np.array(
-                [rng.choice(lf.shape[-1], p=p[b]) for b in range(bsz)], np.int32
-            )
-        else:
-            nxt = lf.argmax(-1).astype(np.int32)
-        out[:, i] = nxt
-        logits, cache = serve_step(
-            params, cache, jnp.asarray(nxt[:, None]), jnp.int32(max_prompt + i)
-        )
-    decode_s = time.time() - t0
+    logits, cache, prefill_s = _run_prefill(serve_step, params, cache, prompts)
+    out, cache, decode_s = _run_decode(
+        serve_step, params, cache, logits, start_pos=max_prompt,
+        max_new_tokens=max_new_tokens, temperature=temperature, seed=seed,
+    )
     return ServeResult(
         tokens=out,
         prefill_s=prefill_s,
@@ -110,21 +134,56 @@ class ClusterServeResult:
     """One multi-device serving round."""
 
     results: List[ServeResult]            # one per request batch
-    placements: List[int]                 # batch index -> device id
+    placements: List[int]                 # batch index -> decode device id
+    prefill_placements: List[int]         # batch index -> prefill device id
+    # Device holding each cache when its decode batch was *placed*
+    # (-1 = unstaged to host); differs from `placements` exactly when the
+    # scheduler strayed from the cache and a move was paid.
+    cache_devices: List[int]
     per_device_s: Dict[int, float]        # modeled busy seconds per device
     makespan_s: float                     # modeled wall-clock (max lane)
     total_tokens: int
     tokens_per_s: float                   # modeled cluster throughput
+    d2d_s: float = 0.0                    # modeled cache-migration seconds
+    restage_s: float = 0.0                # modeled host re-stage seconds
 
 
-def _batch_cost(prompts: List[List[int]], max_new_tokens: int, cfg) -> "cm.OpCost":
-    """Modeled workload of one serving batch: every decode step runs the
-    stack's GEMMs over the batch — collapse to one gemm_cost the scheduler
-    can weigh (tokens × d_model² work, tokens × d_model staged)."""
-    tokens = sum(len(p) for p in prompts) + len(prompts) * max_new_tokens
+def _cache_nbytes(cache) -> float:
+    """Total bytes of the KV/state cache pytree (the pinned buffer size)."""
+    return float(sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(cache)
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype")
+    ))
+
+
+def _prefill_cost(prompts: List[List[int]], cfg) -> cm.OpCost:
+    """Modeled prefill workload: every prompt token runs the stack's GEMMs —
+    collapse to one gemm_cost the scheduler can weigh."""
+    tokens = sum(len(p) for p in prompts)
     d = cfg.d_model
-    return cm.gemm_cost(tokens, d, d, 2, batch=max(cfg.num_layers, 1),
-                        op="serve_batch")
+    return cm.gemm_cost(max(tokens, 1), d, d, 2,
+                        batch=max(cfg.num_layers, 1), op="serve_prefill")
+
+
+def _decode_cost(
+    bsz: int, max_new_tokens: int, cache_bytes: float, cfg
+) -> cm.OpCost:
+    """Modeled decode workload — *including the KV cache in staged bytes*.
+
+    Decode streams the whole cache every step, so a device already holding
+    it (pinned handle) skips that share of the copy region.  This is the
+    asymmetry the ``cost-aware`` scheduler keys on to route decode batches
+    to the cache-holding device."""
+    tokens = bsz * max_new_tokens
+    d = cfg.d_model
+    base = cm.gemm_cost(max(tokens, 1), d, d, 2,
+                        batch=max(cfg.num_layers, 1), op="serve_decode")
+    return dataclasses.replace(
+        base,
+        staged_bytes=base.staged_bytes + cache_bytes,
+        touched_bytes=base.touched_bytes + cache_bytes,
+    )
 
 
 def serve_cluster(
@@ -136,62 +195,148 @@ def serve_cluster(
     cache_len: int = 128,
     temperature: float = 0.0,
     seed: int = 0,
+    pin_caches: bool = True,
 ) -> ClusterServeResult:
     """Serve concurrent request batches across the HeroCluster's devices.
 
-    Each batch is placed by the cluster scheduler (cost-weighted by its
-    token count), then executed with the cluster *pinned* to its assigned
-    device, so every launch the batch issues is traced against that lane.
+    Two placement rounds per batch, both through the active scheduler:
+
+    1. **Prefill** is placed by workload (prompt tokens x stack GEMMs) and
+       executed with the cluster pinned to its lane; the KV cache it builds
+       is pinned there as a :class:`DeviceHandle` (``pin_caches=True``) or
+       drained back to host DRAM (``pin_caches=False``).
+    2. **Decode** is placed with ``assign(..., handle=...)``: a
+       placement-affine scheduler routes it to the cache holder (no cache
+       movement); landing elsewhere costs a modeled ``d2d_copy`` migration,
+       and an unstaged cache costs a full host re-stage — both recorded on
+       the decode lane's trace.
+
+    All request batches are modeled as in flight concurrently — every KV
+    cache stays live from its prefill to its decode, as on a real server
+    holding resident caches per device (chunk ``request_batches`` if host
+    memory can't hold them all at once at full model scale).
+
     Devices run batches sequentially within a lane; lanes run in parallel
-    — the modeled makespan is the longest lane.
+    — the modeled makespan is the longest lane.  Lane seconds are model
+    units throughout (batch-level cost-model breakdowns plus explicit cache
+    moves, never wall clock): the jit cache means fine-grained launches
+    only trace once per shape, so per-batch execution traces are not a
+    coherent lane measure — the batch cost the scheduler placed is.
     """
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
     cluster = engine()
     # one set of weights serves every batch (and one jit cache warms up)
-    params = build_model(cfg).init_params(jax.random.PRNGKey(seed))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
 
-    placements: List[int] = []
-    for i, prompts in enumerate(request_batches):
-        cost = _batch_cost(prompts, max_new_tokens, cfg)
-        placements.append(cluster.assign(cost, shape_key=f"serve-batch-{i}"))
+    per_device_s: Dict[int, float] = {}
+    prefill_placements: List[int] = []
+    handles: List[DeviceHandle] = []
+    sessions = []  # (logits, cache, prefill_s, max_prompt)
 
     results: List[ServeResult] = []
-    per_device_s: Dict[int, float] = {}
+    placements: List[int] = []
+    cache_devices: List[int] = []
     total_tokens = 0
-    for i, prompts in enumerate(request_batches):
-        with cluster.pin_device(placements[i]):
-            with accounting.offload_trace() as trace:
-                res = serve_batch(
-                    arch, prompts, smoke=smoke, max_new_tokens=max_new_tokens,
-                    cache_len=cache_len, temperature=temperature, seed=seed,
-                    params=params,
+    d2d_s = 0.0
+    restage_s = 0.0
+    try:
+        # ---- round 1: prefill placement + execution, caches pinned ------
+        for i, prompts in enumerate(request_batches):
+            cache = model.init_decode_cache(len(prompts), cache_len)
+            p_dev, p_bd = cluster.assign(
+                _prefill_cost(prompts, cfg), shape_key=f"serve-prefill-{i}"
+            )
+            prefill_placements.append(p_dev)
+            with cluster.pin_device(p_dev):
+                logits, cache, prefill_s = _run_prefill(
+                    serve_step, params, cache, prompts
                 )
-        results.append(res)
-        total_tokens += len(prompts) * max_new_tokens
-        # Modeled lane time, in model units throughout (never wall clock —
-        # mixing the two makes lanes incommensurable): device work is the
-        # pinned lane's overlap makespan, host-routed calls add their
-        # modeled host seconds serially.
-        host_s = sum(
-            r.regions.host_s * r.count for r in trace.host_only()
-        )
-        lane_s = trace.cluster_makespan_s() + host_s
-        if lane_s <= 0:  # nothing traced at all: degrade to wall time
-            lane_s = res.prefill_s + res.decode_s
-        dev = placements[i]
-        per_device_s[dev] = per_device_s.get(dev, 0.0) + lane_s
+            per_device_s[p_dev] = per_device_s.get(p_dev, 0.0) + p_bd.offload_s
+            handle = cluster.pin_handle(
+                f"kv-cache-{i}", _cache_nbytes(cache), device_id=p_dev
+            )
+            if not pin_caches:
+                # baseline: the cache drains to host DRAM between phases
+                cluster.unstage_handle(handle)
+            handles.append(handle)
+            sessions.append(
+                (logits, cache, prefill_s, max(len(p) for p in prompts))
+            )
 
-    cluster.sync()  # retire the batch tickets (modeled barrier)
+        cluster.sync()  # prefill barrier: decode starts after prefills retire
+
+        # ---- round 2: handle-affine decode placement + execution --------
+        for i, prompts in enumerate(request_batches):
+            logits, cache, prefill_s, max_prompt = sessions[i]
+            handle = handles[i]
+            d_cost = _decode_cost(
+                len(prompts), max_new_tokens, handle.nbytes, cfg
+            )
+            d_dev, _ = cluster.assign(
+                d_cost,
+                shape_key=f"serve-decode-{i}",
+                handle=handle if pin_caches else None,
+            )
+            placements.append(d_dev)
+            cache_devices.append(handle.device_id if handle.valid else -1)
+            # Bring the cache to the decode lane first, paying the move
+            # visibly (recorded on the active trace, charged to the lane):
+            move_s = 0.0
+            if not handle.valid:
+                # unstaged cache: full host->device copy on this lane
+                move_s = cluster.restage_handle(
+                    handle, device_id=d_dev
+                ).offload_s
+                restage_s += move_s
+            elif handle.device_id != d_dev:
+                # pinned elsewhere: migrate over the d2d link
+                move_s = cluster.migrate_handle(handle, d_dev).offload_s
+                d2d_s += move_s
+            with cluster.pin_device(d_dev):
+                out, cache, decode_s = _run_decode(
+                    serve_step, params, cache, logits, start_pos=max_prompt,
+                    max_new_tokens=max_new_tokens, temperature=temperature,
+                    seed=seed,
+                )
+            # Not assign()'s breakdown: that one was scored before the move,
+            # so a strayed/unstaged cache still counted in its copy region.
+            # Now the cache is resident on the lane — the decode breakdown
+            # takes the credit and the movement cost was added explicitly.
+            lane_s = move_s + cluster.device(d_dev).breakdown_for(
+                d_cost, cluster.policy, handle.name
+            ).offload_s
+            per_device_s[d_dev] = per_device_s.get(d_dev, 0.0) + lane_s
+            results.append(ServeResult(
+                tokens=out,
+                prefill_s=prefill_s,
+                decode_s=decode_s,
+                tokens_per_s=(
+                    len(prompts) * max_new_tokens / max(decode_s, 1e-9)
+                ),
+            ))
+            total_tokens += len(prompts) * max_new_tokens
+
+        cluster.sync()  # retire the batch tickets (modeled barrier)
+    finally:
+        # never leak handles into the singleton engine, even on failure
+        for h in handles:
+            cluster.release_handle(h)
     makespan_s = max(per_device_s.values(), default=0.0)
     return ClusterServeResult(
         results=results,
         placements=placements,
+        prefill_placements=prefill_placements,
+        cache_devices=cache_devices,
         per_device_s=per_device_s,
         makespan_s=makespan_s,
         total_tokens=total_tokens,
         tokens_per_s=total_tokens / max(makespan_s, 1e-9),
+        d2d_s=d2d_s,
+        restage_s=restage_s,
     )
 
 
@@ -205,6 +350,8 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--scheduler", default="least-loaded")
     ap.add_argument("--num-batches", type=int, default=1)
+    ap.add_argument("--no-pin-caches", action="store_true",
+                    help="baseline: caches drain to host between phases")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
     if args.devices > 1 or args.num_batches > 1:
@@ -219,10 +366,13 @@ def main() -> None:
             res = serve_cluster(
                 args.arch, batches, max_new_tokens=args.max_new,
                 temperature=args.temperature,
+                pin_caches=not args.no_pin_caches,
             )
         print(f"{len(batches)} batches over {args.devices} devices "
-              f"({args.scheduler}): placements={res.placements} "
+              f"({args.scheduler}): prefill={res.prefill_placements} "
+              f"decode={res.placements} "
               f"makespan={res.makespan_s:.6g}s "
+              f"d2d={res.d2d_s:.3g}s restage={res.restage_s:.3g}s "
               f"{res.tokens_per_s:.4g} tok/s (modeled)")
         return
     prompts = [list(rng.integers(1, 200, size=args.prompt_len)) for _ in range(args.batch)]

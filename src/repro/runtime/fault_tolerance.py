@@ -19,7 +19,11 @@ training loop.  The pieces (all exercised by tests with injected faults):
     :class:`~repro.core.hero.HeroCluster` through per-device heartbeats; a
     silent device is declared lost, its residency ledger evicted and its
     in-flight launches rescheduled onto survivors through the cluster's
-    active scheduler.
+    active scheduler.  Pinned :class:`~repro.core.hero.DeviceHandle` s homed
+    on the lost device (KV caches, resident weights) become unstaged — their
+    bytes exist only in host DRAM again — and the supervisor re-stages them
+    onto scheduler-picked survivors, charging the full host->device copy
+    region on the new lane (the d2d path needs a live source).
 """
 
 from __future__ import annotations
@@ -107,6 +111,10 @@ class DeviceLossEvent:
     evicted_buffers: Tuple[str, ...]
     # True when no survivor existed: in-flight work was dropped, not moved.
     total_loss: bool = False
+    # Pinned handles that were homed on the lost device (now unstaged) ...
+    unstaged_handles: Tuple[str, ...] = ()
+    # ... and where each was re-staged: (handle name, new device id).
+    restaged: Tuple[Tuple[str, int], ...] = ()
 
 
 @dataclasses.dataclass
@@ -149,9 +157,17 @@ class ClusterSupervisor:
         Losing the *last* device is still recorded (``total_loss=True``,
         in-flight work dropped) rather than raised — the supervisor's job
         is to report every loss, not to die partway through a sweep.
+
+        Handles pinned to the lost device come back unstaged from
+        ``cluster.fail_device``; the supervisor immediately re-stages each
+        onto a scheduler-picked survivor (full host copy charged on the new
+        lane), so the caches survive the loss with their cost paid visibly.
         """
         dev = self.cluster.device(device_id)
         evicted = tuple(sorted(dev.resident))
+        lost_handles = tuple(
+            sorted(h.name for h in self.cluster.handles_on(device_id))
+        )
         try:
             moved = self.cluster.fail_device(device_id)
             total_loss = False
@@ -159,11 +175,24 @@ class ClusterSupervisor:
             dev.fail()
             moved = []
             total_loss = True
+            for name in lost_handles:  # unstaged, nowhere to re-stage
+                h = self.cluster.handle(name)
+                if h is not None:
+                    self.cluster.unstage_handle(h)
+        restaged = []
+        if not total_loss:
+            for name in lost_handles:
+                h = self.cluster.handle(name)
+                if h is not None and not h.valid:
+                    self.cluster.restage_handle(h)
+                    restaged.append((name, h.device_id))
         ev = DeviceLossEvent(
             device_id=device_id,
             rescheduled=tuple(moved),
             evicted_buffers=evicted,
             total_loss=total_loss,
+            unstaged_handles=lost_handles,
+            restaged=tuple(restaged),
         )
         self.events.append(ev)
         return ev

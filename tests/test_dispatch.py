@@ -1,0 +1,195 @@
+"""The declarative offload-op registry: parity across backends + placement.
+
+Every op registered in ``repro.core.dispatch`` must (a) compute the same
+values on the host, device, and device-pallas(interpret) paths as its
+``kernels/ref.py``/``jnp`` reference, across dtypes, and (b) leave trace
+records that always carry a valid device placement.  The parity suite is
+closed over the registry: registering a new op without adding a sample
+here fails the suite, so the descriptor table and its tests stay in
+one-to-one view.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blas, engine, offload_policy, offload_trace
+from repro.core import dispatch as dsp
+from repro.core.dispatch import OffloadOp
+from repro.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+@pytest.fixture(autouse=True)
+def _reset_engine():
+    engine().reset()
+    yield
+    engine().reset()
+
+
+def _np32(x):
+    return np.asarray(x, np.float32)
+
+
+def _samples(dtype):
+    """op name -> (call thunk, reference thunk) for the parity sweep."""
+    a2, b2 = _arr(48, 32, dtype=dtype), _arr(32, 40, dtype=dtype)
+    x3 = _arr(2, 12, 32, dtype=dtype)
+    a3, b3 = _arr(3, 16, 24, dtype=dtype), _arr(3, 24, 16, dtype=dtype)
+    xe, we = _arr(2, 8, 16, dtype=dtype), _arr(2, 16, 12, dtype=dtype)
+    q = _arr(2, 4, 128, 32, dtype=dtype)
+    k = _arr(2, 2, 128, 32, dtype=dtype)
+    v = _arr(2, 2, 128, 32, dtype=dtype)
+    sq = _arr(24, 40, dtype=dtype)
+    ag, xg = _arr(24, 32, dtype=dtype), _arr(32, dtype=dtype)
+    v1, v2 = _arr(64, dtype=dtype), _arr(64, dtype=dtype)
+    return {
+        "gemm": (
+            lambda: blas.gemm(a2, b2),
+            lambda: ref.gemm_ref(a2, b2),
+        ),
+        "matmul": (
+            lambda: blas.matmul(x3, b2),
+            lambda: jnp.einsum(
+                "bsk,kn->bsn", x3.astype(jnp.float32), b2.astype(jnp.float32)
+            ).astype(x3.dtype),
+        ),
+        "gemm_batched": (
+            lambda: blas.gemm_batched(a3, b3),
+            lambda: ref.gemm_batched_ref(a3, b3),
+        ),
+        "expert_matmul": (
+            lambda: blas.expert_matmul(xe, we),
+            lambda: ref.moe_gemm_ref(xe, we),
+        ),
+        "attention": (
+            lambda: blas.attention(q, k, v, causal=True),
+            lambda: ref.attention_ref(q, k, v, causal=True),
+        ),
+        "syrk": (
+            lambda: blas.syrk(sq),
+            lambda: ref.gemm_ref(sq, sq.T),
+        ),
+        "gemv": (
+            lambda: blas.gemv(ag, xg),
+            lambda: ref.gemm_ref(ag, xg[:, None])[:, 0],
+        ),
+        "dot": (
+            lambda: blas.dot(v1, v2),
+            lambda: jnp.sum(
+                v1.astype(jnp.float32) * v2.astype(jnp.float32)
+            ).astype(v1.dtype),
+        ),
+        "axpy": (
+            lambda: blas.axpy(2.0, v1, v2),
+            lambda: 2.0 * v1 + v2,
+        ),
+        "scal": (
+            lambda: blas.scal(0.5, v1),
+            lambda: 0.5 * v1,
+        ),
+        "nrm2": (
+            lambda: blas.nrm2(v1),
+            lambda: jnp.sqrt(
+                jnp.sum(jnp.square(v1.astype(jnp.float32)))
+            ).astype(v1.dtype),
+        ),
+    }
+
+
+BACKEND_POLICIES = {
+    "host": dict(mode="host"),
+    "device": dict(mode="device"),
+    "device-pallas-interpret": dict(
+        mode="device", use_pallas=True, interpret=True
+    ),
+}
+
+
+def _tol(dtype):
+    if dtype == jnp.bfloat16:
+        return dict(rtol=5e-2, atol=5e-2)
+    return dict(rtol=2e-5, atol=2e-5)
+
+
+def test_parity_suite_covers_every_registered_op():
+    """The registry and the parity table must stay in one-to-one view."""
+    assert set(_samples(jnp.float32)) == set(dsp.registered_ops())
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_POLICIES))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_registered_ops_match_reference(backend, dtype):
+    samples = _samples(dtype)
+    for name in dsp.registered_ops():
+        call, reference = samples[name]
+        with offload_policy(**BACKEND_POLICIES[backend]):
+            got = call()
+        np.testing.assert_allclose(
+            _np32(got), _np32(reference()), err_msg=f"{name} on {backend}",
+            **_tol(dtype),
+        )
+
+
+def _run_all_ops():
+    samples = _samples(jnp.float32)
+    for name in dsp.registered_ops():
+        samples[name][0]()
+
+
+def test_every_trace_record_carries_valid_device_id():
+    """Regression for the pre-registry drift: gemm/gemm_batched/
+    expert_matmul/attention/syrk and the level-1/2 ops dropped the
+    placement their launch chose.  Through the single dispatch() path every
+    record must carry it: offloaded records name a real device, host
+    records the host sentinel."""
+    n_dev = 3
+    with offload_policy(mode="device", num_devices=n_dev):
+        engine().reset()
+        with offload_trace() as t:
+            _run_all_ops()
+    assert len(t.records) == len(dsp.registered_ops())
+    by_op = {r.op: r for r in t.records}
+    for r in t.records:
+        if r.backend.startswith("device"):
+            assert 0 <= r.device_id < n_dev, (r.op, r.device_id)
+        else:
+            assert r.device_id == -1, (r.op, r.device_id)
+    # syrk is host-only (paper compiles syrk.c for the host alone) ...
+    assert by_op["syrk"].backend == "host"
+    # ... and everything else must be offloaded AND placed under mode=device
+    for r in t.records:
+        if r.op != "syrk":
+            assert r.backend.startswith("device") and r.device_id >= 0, r.op
+
+
+def test_dispatch_routes_to_pinned_handle_device():
+    """A handle keys scheduling on the pinned buffer: cost-aware follows
+    the residency credit to the handle's device."""
+    with offload_policy(
+        mode="device", num_devices=4, scheduler="cost-aware"
+    ):
+        eng = engine()
+        eng.reset()
+        h = eng.pin_handle("weights", 1 << 20, device_id=2)
+        a, b = _arr(256, 256), _arr(256, 256)
+        with offload_trace() as t:
+            blas.gemm(a, b, handle=h)
+        (rec,) = t.records
+        assert rec.device_id == 2
+
+
+def test_unknown_op_and_duplicate_registration_raise():
+    with pytest.raises(KeyError, match="unknown offload op"):
+        dsp.get_op("cholesky")
+    gemm_desc = dsp.get_op("gemm")
+    # idempotent: re-registering the identical descriptor is a no-op
+    dsp.register(gemm_desc)
+    clone = OffloadOp(name="gemm", cost=lambda: None, host=lambda: None)
+    with pytest.raises(ValueError, match="already registered"):
+        dsp.register(clone)

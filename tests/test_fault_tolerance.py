@@ -127,3 +127,44 @@ def test_recovery_gives_up_after_max_restarts(tmp_path):
             num_steps=5, start_step=0, step_fn=step_fn,
             save_fn=lambda s: None, restore_fn=lambda: 0, max_restarts=2,
         )
+
+
+# ---------------------------------------------------------------------------
+# Device loss with pinned handles (KV caches survive via host re-stage)
+# ---------------------------------------------------------------------------
+
+def test_supervisor_restages_lost_device_handles():
+    from repro.core import offload_trace
+    from repro.core.hero import HeroCluster
+    from repro.runtime.fault_tolerance import ClusterSupervisor
+
+    c = HeroCluster(num_devices=3)
+    h = c.pin_handle("kv-cache-7", float(1 << 20), device_id=1)
+    keep = c.pin_handle("kv-cache-8", float(1 << 18), device_id=2)
+    sup = ClusterSupervisor(cluster=c)
+    with offload_trace() as t:
+        ev = sup.fail_device(1)
+    assert ev.unstaged_handles == ("kv-cache-7",)
+    ((name, new_dev),) = ev.restaged
+    assert name == "kv-cache-7" and new_dev in (0, 2)
+    # the handle is live again, resident on a survivor
+    assert h.valid and h.device_id == new_dev
+    assert c.device(new_dev).is_resident("kv-cache-7")
+    # survivor-homed handles are untouched
+    assert keep.device_id == 2
+    # the re-stage paid a full host->device copy, recorded on the new lane
+    (rec,) = [r for r in t.records if r.op == "restage"]
+    assert rec.device_id == new_dev and rec.regions.copy_s > 0
+
+
+def test_supervisor_total_loss_leaves_handles_unstaged():
+    from repro.core.hero import HeroCluster
+    from repro.runtime.fault_tolerance import ClusterSupervisor
+
+    c = HeroCluster(num_devices=1)
+    h = c.pin_handle("kv", 128.0, device_id=0)
+    sup = ClusterSupervisor(cluster=c)
+    ev = sup.fail_device(0)
+    assert ev.total_loss
+    assert ev.unstaged_handles == ("kv",) and ev.restaged == ()
+    assert not h.valid  # nowhere to go until a device is recovered
