@@ -1,12 +1,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: collect check test bench bench-smoke ci
+.PHONY: collect check test bench bench-smoke ci frontend import-time
+
+# Frontend import-time gate: every repro.frontend module (and repro.hnp)
+# must import in <1s cold — the lazy layer stays import-light (no
+# module-scope jax).  Fails `make collect` on regression.
+import-time:
+	$(PYTHON) tools/check_import_time.py
 
 # Fast gate: the whole suite must *collect* with zero errors (seconds, not
 # minutes) — catches missing-dependency and import-drift regressions before
 # any test runs.
-collect:
+collect: import-time
 	$(PYTHON) -m pytest --collect-only -q
 
 # Tier-1 verify: collect gate first, then the suite.
@@ -15,11 +21,17 @@ check: collect
 
 test: check
 
+# The hnp graph-frontend suite in isolation (parity, fusion, batching,
+# residency threading) — the fast loop while working on repro/frontend.
+frontend:
+	$(PYTHON) -m pytest tests/test_frontend.py -q
+
 bench:
 	PYTHONPATH=src:. $(PYTHON) -m benchmarks.cluster_scaling
 
 # Perf trajectory gate: fast modeled sweeps -> BENCH_offload.json (gemm
-# sweep, cluster scaling, serve makespan pinned vs unpinned).
+# sweep, cluster scaling, serve makespan pinned vs unpinned, hnp fused
+# graph vs eager chain) + one appended line in BENCH_trajectory.jsonl.
 bench-smoke:
 	PYTHONPATH=src:. $(PYTHON) -m benchmarks.run --smoke
 

@@ -6,10 +6,13 @@ Two modes:
                    section (the full human-readable sweep).
 * ``--smoke``    — a fast, deterministic subset (modeled numbers only plus
                    one smoke serve round) written to ``BENCH_offload.json``:
-                   gemm sweep, cluster scaling 1->8, and the serve makespan
-                   of pinned cost-aware vs unpinned round-robin placement.
-                   Runs in CI after ``make check`` (``make ci``), so the
-                   perf trajectory is recorded on every PR.
+                   gemm sweep, cluster scaling 1->8, the serve makespan of
+                   pinned cost-aware vs unpinned round-robin placement, and
+                   the frontend graph-vs-eager comparison.  Each smoke run
+                   also *appends* a headline line to ``BENCH_trajectory.jsonl``
+                   (commit + timestamp from the CI env when present), so the
+                   perf trajectory accumulates across PRs instead of being
+                   overwritten.  Runs in CI after ``make check`` (``make ci``).
 
 Run: PYTHONPATH=src:. python -m benchmarks.run [--smoke] [--out PATH]
 """
@@ -18,6 +21,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -101,22 +106,123 @@ def _smoke_serve_makespan() -> dict:
     return out
 
 
+def _smoke_frontend_graph() -> dict:
+    """Graph frontend vs eager BLAS: same 3-GEMM chain, modeled numbers.
+
+    Eager ``blas.*`` pays full host<->device staging per op; the ``hnp``
+    graph threads residency (intermediates stay on device) and fuses the
+    elementwise links, so it must win on staged bytes and modeled time."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.hnp as hnp
+    from repro.core import blas, engine, offload_policy, offload_trace
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    ws = [
+        jnp.asarray(rng.normal(size=(512, 512)), jnp.float32),
+        jnp.asarray(rng.normal(size=(512, 512)), jnp.float32),
+        jnp.asarray(rng.normal(size=(512, 256)), jnp.float32),
+    ]
+
+    def stats(trace):
+        copy, fork, comp, _ = trace.totals()
+        return {
+            "launches": len(trace.offloaded()),
+            "staged_bytes": trace.total_staged_bytes(),
+            "staged_bytes_charged": trace.total_staged_bytes_charged(),
+            "offload_s": copy + fork + comp + trace.total_d2d_s(),
+            "makespan_s": trace.cluster_makespan_s(),
+        }
+
+    with offload_policy(mode="device", num_devices=2, scheduler="cost-aware"):
+        engine().reset()
+        with offload_trace() as t_eager:
+            h = blas.matmul(x, ws[0])
+            h = jnp.tanh(h)
+            h = blas.matmul(h, ws[1])
+            h = jnp.tanh(h)
+            blas.matmul(h, ws[2])
+        engine().reset()
+        with offload_trace() as t_graph:
+            with hnp.offload_region("bench-chain") as region:
+                g = hnp.tanh(hnp.array(x) @ ws[0])
+                g = hnp.tanh(g @ ws[1])
+                hnp.asnumpy(g @ ws[2])
+    eager, graph = stats(t_eager), stats(t_graph)
+    return {
+        "eager": eager,
+        "graph": graph,
+        "graph_fused_ops": region.report.fused_ops,
+        "graph_readback_bytes": region.report.readback_bytes,
+        "staging_bytes_saved": (
+            eager["staged_bytes_charged"] - graph["staged_bytes_charged"]
+        ),
+        "modeled_speedup": eager["offload_s"] / max(graph["offload_s"], 1e-30),
+    }
+
+
+def _git_commit() -> str:
+    for var in ("GITHUB_SHA", "CI_COMMIT_SHA"):
+        if os.environ.get(var):
+            return os.environ[var]
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> dict:
+    """One headline line per smoke run, appended — the perf trajectory
+    accumulates across PRs instead of being overwritten per run."""
+    serve = summary["serve_makespan"]
+    frontend = summary["frontend_graph"]
+    entry = {
+        "commit": _git_commit(),
+        # CI stamps a reproducible time; local runs fall back to wall clock.
+        "timestamp": os.environ.get("CI_TIMESTAMP")
+        or time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "ci_run": os.environ.get("GITHUB_RUN_ID", ""),
+        "headline": {
+            "cost_aware_scaling_8dev": summary["cluster_scaling"][
+                "cost-aware_scaling_8dev"
+            ],
+            "serve_pinned_speedup": serve["pinned_speedup"],
+            "frontend_modeled_speedup": frontend["modeled_speedup"],
+            "frontend_staging_bytes_saved": frontend["staging_bytes_saved"],
+            "elapsed_s": summary["elapsed_s"],
+        },
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
+
+
 def smoke(out_path: str = "BENCH_offload.json") -> dict:
     t0 = time.time()
     summary = {
         "gemm_sweep": _smoke_gemm_sweep(),
         "cluster_scaling": _smoke_cluster_scaling(),
         "serve_makespan": _smoke_serve_makespan(),
+        "frontend_graph": _smoke_frontend_graph(),
     }
     summary["elapsed_s"] = time.time() - t0
     with open(out_path, "w") as f:
         json.dump(summary, f, indent=2)
+    _append_trajectory(summary)
     serve = summary["serve_makespan"]
+    frontend = summary["frontend_graph"]
     print(
         f"BENCH_offload: gemm_sweep={len(summary['gemm_sweep'])} rows, "
         f"cost-aware 8-dev scaling="
         f"{summary['cluster_scaling']['cost-aware_scaling_8dev']:.2f}x, "
-        f"pinned-vs-unpinned serve speedup={serve['pinned_speedup']:.2f}x "
+        f"pinned-vs-unpinned serve speedup={serve['pinned_speedup']:.2f}x, "
+        f"hnp graph-vs-eager speedup={frontend['modeled_speedup']:.2f}x "
+        f"(staging saved={frontend['staging_bytes_saved']:.0f}B) "
         f"-> {out_path} ({summary['elapsed_s']:.1f}s)"
     )
     return summary

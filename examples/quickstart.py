@@ -1,10 +1,17 @@
 """Quickstart — the paper's user story on this framework.
 
 The paper links NumPy against an OpenBLAS that offloads GEMM to a RISC-V
-accelerator; the application code never changes.  Here the same seam is
-``repro.core.blas``: array code calls BLAS-level ops, the offload engine
-routes each call (host / device / Pallas kernel) by cost model, and the
-trace shows the paper's three-region accounting.
+accelerator; *the application code never changes*.  Here that story is
+``repro.hnp``: write plain NumPy-looking array code, and the library
+underneath decides what runs where.  Operations build a lazy expression
+graph; forcing it lowers the whole graph onto the offload cluster — fusing
+elementwise epilogues into their producing GEMM, batching independent GEMMs,
+and keeping intermediates device-resident instead of round-tripping through
+host DRAM.
+
+Below the frontend sits the same seam the paper has: ``repro.core.blas``
+(the OpenBLAS analogue) over the declarative op registry, with the
+three-region (copy / fork-join / compute) accounting.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,49 +19,74 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
+import repro.hnp as hnp
 from repro.core import blas, crossover_size, engine, offload_policy, offload_trace
-from repro.core.platform import HESOC_VCU128, TPU_V5E
+from repro.core.platform import HESOC_VCU128
 
 
-def user_application(x, w1, w2):
-    """A 'NumPy user app': two-layer projection + similarity matrix."""
-    h = blas.matmul(x, w1)                 # hot GEMM -> offload candidate
-    h = jnp.tanh(h)
-    y = blas.matmul(h, w2)
-    sim = blas.syrk(y)                     # host-only op (per the paper)
-    norm = blas.nrm2(sim.reshape(-1))      # level-1 stays host
-    return y, sim, norm
+def user_application(x, w1, b1, w2):
+    """A 'NumPy user app' — no kernel calls, no placement, just array math."""
+    h = hnp.tanh(hnp.linear(x, w1, b1))   # GEMM + fused bias/tanh epilogue
+    y = h @ w2                            # consumes h where it lives
+    sim = hnp.syrk(y)                     # any registered op, by name
+    return y, sim
 
 
 def main() -> None:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
     w1 = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
     w2 = jnp.asarray(rng.normal(size=(512, 128)), jnp.float32)
 
-    print("=== paper platform (CVA6 + Snitch heSoC model) ===")
+    print("=== transparent acceleration: the hnp graph frontend ===")
+    engine().reset()
+    with offload_policy(mode="device", num_devices=2, scheduler="cost-aware"):
+        with offload_trace() as t:
+            with hnp.offload_region("quickstart") as region:
+                y, sim = user_application(hnp.array(x), w1, b1, w2)
+                y_np = hnp.asnumpy(y)      # forces: whole graph lowers here
+                hnp.asnumpy(sim)
+    print(t.summary())
+    print(region.report.summary())
+    for r in region.report.launches:
+        fused = f" (+fused {'/'.join(r.fused)})" if r.fused else ""
+        print(
+            f"  {r.op:10s} -> {r.backend}@dev{r.device_id}"
+            f" resident={r.resident_fraction:.0%}"
+            f" readback={r.readback_bytes:.0f}B{fused}"
+        )
+    ref = np.tanh(np.asarray(x) @ np.asarray(w1) + np.asarray(b1)) @ np.asarray(w2)
+    print(f"max err vs numpy: {np.max(np.abs(y_np - ref)):.2e}")
+
+    print("\n=== same chain, eager BLAS seam (per-op staging) ===")
+    engine().reset()
+    with offload_policy(mode="device", num_devices=2, scheduler="cost-aware"):
+        with offload_trace() as te:
+            h = blas.matmul(x, w1)
+            h = jnp.tanh(h + b1)
+            blas.matmul(h, w2)
+    saved = te.total_staged_bytes_charged() - t.by_graph()["quickstart"].staged_bytes_charged
+    print(te.summary())
+    print(f"staging the graph frontend avoided: {saved:.0f} bytes")
+
+    print("\n=== paper platform (CVA6 + Snitch heSoC model), auto offload ===")
     engine().reset()
     with offload_policy(mode="auto", platform="hesoc-vcu128"):
-        with offload_trace() as t:
-            user_application(x, w1, w2)
-    print(t.summary())
-    for r in t.records:
+        with offload_trace() as tp:
+            y2, _ = user_application(hnp.array(x), w1, b1, w2)
+            hnp.asnumpy(y2)
+    print(tp.summary())
+    for r in tp.records:
         print(f"  {r.op:8s} {r.shape_key:40s} -> {r.backend}")
     print(f"paper-platform crossover size (f64): n={crossover_size(HESOC_VCU128, 8)}")
-
-    print("\n=== TPU v5e, resident weights (the paper's IOMMU end-state) ===")
-    engine().reset()
-    with offload_policy(mode="auto", platform="tpu-v5e", resident_fraction=1.0):
-        with offload_trace() as t:
-            user_application(x, w1, w2)
-    print(t.summary())
 
     print("\n=== Pallas device kernels (interpret-mode validation) ===")
     engine().reset()
     with offload_policy(mode="device", use_pallas=True, interpret=True):
-        y = blas.gemm(x, w1)
+        y3 = hnp.asnumpy(hnp.array(x) @ w1)
     ref = np.asarray(x) @ np.asarray(w1)
-    print(f"pallas gemm max err vs numpy: {np.max(np.abs(np.asarray(y) - ref)):.2e}")
+    print(f"pallas gemm max err vs numpy: {np.max(np.abs(y3 - ref)):.2e}")
 
 
 if __name__ == "__main__":

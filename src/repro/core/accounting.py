@@ -25,12 +25,15 @@ from repro.core.cost_model import OpCost, RegionBreakdown
 __all__ = [
     "DeviceAggregate",
     "DeviceTimeline",
+    "GraphAggregate",
     "OffloadRecord",
     "OffloadTrace",
     "offload_trace",
     "current_trace",
     "scaled",
     "current_scale",
+    "graph_region",
+    "current_graph",
 ]
 
 
@@ -50,6 +53,19 @@ class OffloadRecord:
     count: float = 1.0
     # Cluster placement: which virtual PMCA ran the call (-1 = host).
     device_id: int = -1
+    # Effective operand-residency credit the launch applied: the fraction of
+    # ``cost.staged_bytes`` that never crossed the host<->device link (graph
+    # scheduling threads exact per-call fractions; eager calls carry the
+    # policy default).
+    resident_fraction: float = 0.0
+    # Graph scope this call was lowered under ("" = eager call site).  Set by
+    # the ambient :func:`graph_region`, the way ``count`` is set by `scaled`.
+    graph: str = ""
+
+    @property
+    def staged_bytes_charged(self) -> float:
+        """Host<->device bytes actually paid after the residency credit."""
+        return self.cost.staged_bytes * (1.0 - self.resident_fraction)
 
 
 @dataclasses.dataclass
@@ -68,6 +84,31 @@ class DeviceAggregate:
     @property
     def offload_s(self) -> float:
         return self.copy_s + self.fork_join_s + self.compute_s + self.d2d_s
+
+
+@dataclasses.dataclass
+class GraphAggregate:
+    """Rollup of one graph region's offloaded calls (``repro.hnp`` lowers a
+    whole expression graph under one :func:`graph_region` scope)."""
+
+    graph: str
+    calls: float = 0.0
+    copy_s: float = 0.0
+    fork_join_s: float = 0.0
+    compute_s: float = 0.0
+    d2d_s: float = 0.0
+    host_s: float = 0.0
+    flops: float = 0.0
+    staged_bytes: float = 0.0           # bytes the eager path would stage
+    staged_bytes_charged: float = 0.0   # bytes actually staged after credit
+
+    @property
+    def offload_s(self) -> float:
+        return self.copy_s + self.fork_join_s + self.compute_s + self.d2d_s
+
+    @property
+    def staged_bytes_saved(self) -> float:
+        return self.staged_bytes - self.staged_bytes_charged
 
 
 @dataclasses.dataclass
@@ -186,6 +227,30 @@ class OffloadTrace:
             d.d2d_s += r.regions.d2d_s * r.count
         return agg
 
+    def by_graph(self) -> Dict[str, GraphAggregate]:
+        """Offloaded work grouped by graph region (eager records under "").
+
+        The per-graph rollup is what the ``hnp`` frontend reports: how much
+        staging the residency threading actually saved for one lowered
+        expression graph, next to the region seconds it paid."""
+        agg: Dict[str, GraphAggregate] = {}
+        for r in self.offloaded():
+            g = agg.setdefault(r.graph, GraphAggregate(r.graph))
+            g.calls += r.count
+            g.copy_s += r.regions.copy_s * r.count
+            g.fork_join_s += r.regions.fork_join_s * r.count
+            g.compute_s += r.regions.compute_s * r.count
+            g.d2d_s += r.regions.d2d_s * r.count
+            g.host_s += r.regions.host_s * r.count
+            g.flops += r.cost.flops * r.count
+            g.staged_bytes += r.cost.staged_bytes * r.count
+            g.staged_bytes_charged += r.staged_bytes_charged * r.count
+        return agg
+
+    def total_staged_bytes_charged(self) -> float:
+        """Host<->device bytes actually paid (residency credits applied)."""
+        return sum(r.staged_bytes_charged * r.count for r in self.offloaded())
+
     def total_d2d_s(self) -> float:
         """Modeled device-to-device migration seconds (pinned-handle moves)."""
         return sum(r.regions.d2d_s * r.count for r in self.offloaded())
@@ -249,6 +314,7 @@ class OffloadTrace:
 # Module-level stacks (single-threaded tracing; matches JAX's own model).
 _TRACE_STACK: List[OffloadTrace] = []
 _SCALE_STACK: List[float] = []
+_GRAPH_STACK: List[str] = []
 
 
 def current_trace() -> Optional[OffloadTrace]:
@@ -272,6 +338,24 @@ def scaled(mult: float) -> Iterator[None]:
         _SCALE_STACK.pop()
 
 
+def current_graph() -> str:
+    return _GRAPH_STACK[-1] if _GRAPH_STACK else ""
+
+
+@contextlib.contextmanager
+def graph_region(name: str) -> Iterator[None]:
+    """Stamp every record in the scope as belonging to graph ``name``.
+
+    Entered by the ``hnp`` scheduler around one lowered expression graph
+    (including the d2d migrations its residency threading triggers), so
+    :meth:`OffloadTrace.by_graph` can roll the whole graph up."""
+    _GRAPH_STACK.append(str(name))
+    try:
+        yield
+    finally:
+        _GRAPH_STACK.pop()
+
+
 @contextlib.contextmanager
 def offload_trace() -> Iterator[OffloadTrace]:
     t = OffloadTrace()
@@ -285,4 +369,8 @@ def offload_trace() -> Iterator[OffloadTrace]:
 def record(rec: OffloadRecord) -> None:
     t = current_trace()
     if t is not None:
-        t.add(dataclasses.replace(rec, count=current_scale()))
+        t.add(
+            dataclasses.replace(
+                rec, count=current_scale(), graph=rec.graph or current_graph()
+            )
+        )

@@ -36,6 +36,7 @@ __all__ = [
     "DeviceHandle",
     "OffloadOp",
     "dispatch",
+    "dispatch_placed",
     "get_op",
     "register",
     "registered_ops",
@@ -88,7 +89,17 @@ def _descriptor_sig(op: OffloadOp) -> tuple:
     def fsig(f):
         if f is None:
             return None
-        return (getattr(f, "__module__", None), getattr(f, "__qualname__", None))
+        # module + qualname alone would collapse all module-level lambdas to
+        # ('<mod>', '<lambda>'); the code location keeps *different* lambdas
+        # distinct while staying stable across importlib reloads (re-executed
+        # defs keep their file and line).
+        code = getattr(f, "__code__", None)
+        loc = (code.co_filename, code.co_firstlineno) if code else None
+        return (
+            getattr(f, "__module__", None),
+            getattr(f, "__qualname__", None),
+            loc,
+        )
 
     return (
         op.name, op.host_only, op.note,
@@ -133,6 +144,7 @@ def dispatch(
     name: str,
     *args,
     handle: Optional[DeviceHandle] = None,
+    resident_fraction: Optional[float] = None,
     **kwargs,
 ):
     """Route one registered op through the offload seam and execute it.
@@ -147,6 +159,31 @@ def dispatch(
        placement) and queues the modeled ticket;
     4. the winning lowering runs: plan > pallas > host.
     """
+    out, _ = dispatch_placed(
+        name, *args, handle=handle, resident_fraction=resident_fraction,
+        **kwargs,
+    )
+    return out
+
+
+def dispatch_placed(
+    name: str,
+    *args,
+    handle: Optional[DeviceHandle] = None,
+    resident_fraction: Optional[float] = None,
+    **kwargs,
+):
+    """Graph-aware dispatch entry: like :func:`dispatch`, but returns
+    ``(result, launch)`` where ``launch`` is the
+    :class:`~repro.core.hero.LaunchResult` naming the backend and device the
+    call landed on.
+
+    The ``hnp`` graph scheduler lowers whole expression graphs through this
+    entry: it threads the exact per-node ``resident_fraction`` (which
+    operand/result bytes stay device-resident) and reads the placement back
+    so the produced intermediate can be pinned where it actually lives and
+    its consumers routed (or d2d-migrated) to the data.
+    """
     op = get_op(name)
     cost = op.cost(*args, **kwargs)
     arrays = [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]
@@ -159,7 +196,7 @@ def dispatch(
         and not op.host_only
         and (op.eligible is None or bool(op.eligible(*args, **kwargs)))
     )
-    backend, device_id = engine().launch(
+    launch = engine().launch(
         cost,
         dtype=str(arrays[0].dtype) if arrays else "",
         shape_key=shape_key(*arrays),
@@ -167,9 +204,11 @@ def dispatch(
         force_host=op.host_only,
         note="tp-shard-map" if plan is not None else op.note,
         handle=handle,
+        resident_fraction=resident_fraction,
     )
     if plan is not None:
-        return op.plan_lower(plan, *args, **kwargs)
-    if backend == "device-pallas":
-        return op.pallas(*args, interpret=engine().policy.interpret, **kwargs)
-    return op.host(*args, **kwargs)
+        return op.plan_lower(plan, *args, **kwargs), launch
+    if launch.backend == "device-pallas":
+        out = op.pallas(*args, interpret=engine().policy.interpret, **kwargs)
+        return out, launch
+    return op.host(*args, **kwargs), launch

@@ -524,6 +524,23 @@ class HeroCluster:
         handle.device_id = dev.device_id
         return bd
 
+    @contextlib.contextmanager
+    def handle_scope(self) -> Iterator[None]:
+        """Scope the lifetime of handles pinned inside to the block.
+
+        The graph frontend pins one handle per device-resident intermediate
+        so multi-op chains reuse placement; those buffers are dead once the
+        graph (or an ``hnp.offload_region``) finishes.  On exit, every handle
+        pinned inside the scope is released and its residency mark evicted —
+        handles pinned before the scope (weights, KV caches) survive.
+        """
+        before = set(self._handles)
+        try:
+            yield
+        finally:
+            for name in [n for n in self._handles if n not in before]:
+                self.release_handle(self._handles[name])
+
     # ---- fault tolerance --------------------------------------------------
     def fail_device(self, device_id: int) -> List[Tuple[LaunchTicket, int]]:
         """Device loss: evict + reschedule its in-flight work.
@@ -639,6 +656,7 @@ class HeroCluster:
         force_host: bool = False,
         note: str = "",
         handle: Optional[DeviceHandle] = None,
+        resident_fraction: Optional[float] = None,
     ) -> LaunchResult:
         """Route one BLAS call.  Returns backend + device placement.
 
@@ -647,25 +665,38 @@ class HeroCluster:
         trace (if any) and one :class:`LaunchTicket` on the chosen device's
         in-flight queue.  ``handle`` keys scheduling and residency credit on
         a pinned buffer instead of the operand shapes.
+
+        ``resident_fraction`` overrides the policy's blanket fraction with an
+        exact per-call value — the graph frontend computes, per node, how
+        many operand/result bytes already live (or will stay) in device
+        memory and threads that through here, so intermediates consumed
+        on-device never pay the host staging region.  When given, it also
+        replaces the all-or-nothing ledger bump (the caller already did the
+        bookkeeping at byte granularity).
         """
         pol = self.policy
         pol.validate()
         key = (
             handle.name if handle is not None and handle.valid else shape_key
         )
+        rf = (
+            pol.resident_fraction
+            if resident_fraction is None
+            else min(max(float(resident_fraction), 0.0), 1.0)
+        )
         if force_host:  # ops compiled host-only (paper: syrk.c)
             bd = breakdown(
                 cost,
                 self.platform,
                 zero_copy=pol.zero_copy,
-                resident_fraction=pol.resident_fraction,
+                resident_fraction=rf,
             )
             accounting.record(
                 accounting.OffloadRecord(
                     op=cost.op, shape_key=shape_key, dtype=dtype,
                     backend="host", cost=cost, regions=bd,
                     zero_copy=pol.zero_copy, note=note or "host-only op",
-                    device_id=HOST_DEVICE_ID,
+                    device_id=HOST_DEVICE_ID, resident_fraction=rf,
                 )
             )
             return LaunchResult("host")
@@ -675,7 +706,7 @@ class HeroCluster:
                 cost,
                 self.platform,
                 zero_copy=pol.zero_copy,
-                resident_fraction=pol.resident_fraction,
+                resident_fraction=rf,
             )
         elif pol.mode == "device":
             offload = True
@@ -683,14 +714,14 @@ class HeroCluster:
                 cost,
                 self.platform,
                 zero_copy=pol.zero_copy,
-                resident_fraction=pol.resident_fraction,
+                resident_fraction=rf,
             )
         else:  # auto — the paper's size-dependent decision
             offload, bd = decide_offload(
                 cost,
                 self.platform,
                 zero_copy=pol.zero_copy,
-                resident_fraction=pol.resident_fraction,
+                resident_fraction=rf,
                 min_speedup=pol.min_speedup,
             )
 
@@ -700,9 +731,11 @@ class HeroCluster:
             device_id = dev.device_id
             if not dev.booted:
                 dev.boot()  # first offload boots the device, as in HeroSDK
-            # residency affinity credit on the chosen device
-            if dev.is_resident(key):
+            # residency affinity credit on the chosen device (skipped when
+            # the caller supplied the exact fraction itself)
+            if resident_fraction is None and dev.is_resident(key):
                 bd = dev.breakdown_for(cost, pol, key)
+                rf = 1.0
             dev.enqueue(
                 LaunchTicket(op=cost.op, shape_key=key,
                              offload_s=bd.offload_s)
@@ -725,6 +758,7 @@ class HeroCluster:
                 zero_copy=pol.zero_copy,
                 note=note,
                 device_id=device_id,
+                resident_fraction=rf,
             )
         )
         return LaunchResult(backend, device_id)

@@ -1,0 +1,32 @@
+"""repro.frontend — graph capture layer between user code and the cluster.
+
+``repro.hnp`` (the public face of this package) is a lazy NumPy-like
+namespace: operations build an expression graph instead of executing, and a
+graph scheduler lowers whole graphs onto the declarative offload registry —
+fusing elementwise chains, batching independent GEMMs across cluster lanes,
+and keeping device-resident intermediates on device.
+
+Modules (all import-light; jax loads lazily at first use):
+  lazy      — LazyArray + expression-graph nodes
+  schedule  — the graph scheduler / registry lowering + GraphRegion scoping
+  api       — the hnp namespace (re-exported as ``repro.hnp``)
+"""
+
+from repro.frontend.lazy import LazyArray, Node  # noqa: F401
+from repro.frontend.schedule import (  # noqa: F401
+    GraphRegion,
+    GraphReport,
+    NodeReport,
+    evaluate,
+    offload_region,
+)
+
+__all__ = [
+    "GraphRegion",
+    "GraphReport",
+    "LazyArray",
+    "Node",
+    "NodeReport",
+    "evaluate",
+    "offload_region",
+]

@@ -1,0 +1,236 @@
+"""``repro.hnp`` — a lazy NumPy-like namespace over the offload registry.
+
+The paper's user story, reproduced at graph granularity: write plain
+array code, and the library underneath decides what runs where ::
+
+    import repro.hnp as hnp
+
+    x = hnp.array(x_np)
+    h = hnp.tanh(x @ w1)          # nothing executes yet
+    y = hnp.linear(h, w2, bias)   # ... the graph just grows
+    out = hnp.asnumpy(y)          # whole graph lowers onto the cluster
+
+Operations build a lazy expression graph (:mod:`repro.frontend.lazy`); the
+scheduler (:mod:`repro.frontend.schedule`) lowers it onto ``dispatch()`` —
+fusing elementwise epilogues, batching independent GEMMs and keeping
+device-resident intermediates on device.
+
+**Seam contract**: any op registered in :mod:`repro.core.dispatch` appears
+here for free — ``hnp.gemm``, ``hnp.attention``, ``hnp.syrk`` ... are
+generated from the registry via module ``__getattr__``, with shape/dtype
+inferred abstractly from the op's host lowering.  Registering a new
+``OffloadOp`` is the *only* step to make it graph-capturable.
+
+Import-light by contract (see ``make collect``'s import-time gate): jax and
+the offload seam are loaded lazily on first use, not at import.
+"""
+
+from __future__ import annotations
+
+import builtins
+from typing import Optional
+
+import numpy as np
+
+from repro.frontend.lazy import LazyArray, leaf, lift, registry_node
+from repro.frontend.lazy import _elementwise_binary, _elementwise_unary
+from repro.frontend.schedule import (
+    GraphRegion,
+    GraphReport,
+    NodeReport,
+    current_region,
+    evaluate,
+    offload_region,
+)
+
+__all__ = [
+    "GraphRegion",
+    "GraphReport",
+    "LazyArray",
+    "NodeReport",
+    "abs",
+    "add",
+    "array",
+    "asarray",
+    "asnumpy",
+    "block",
+    "current_region",
+    "divide",
+    "exp",
+    "gelu",
+    "linear",
+    "matmul",
+    "max",
+    "maximum",
+    "mean",
+    "min",
+    "minimum",
+    "multiply",
+    "offload_region",
+    "power",
+    "relu",
+    "sigmoid",
+    "silu",
+    "sqrt",
+    "subtract",
+    "sum",
+    "tanh",
+]
+
+
+# ---------------------------------------------------------------------------
+# Array construction / forcing
+# ---------------------------------------------------------------------------
+
+def array(obj, dtype=None, *, pin: bool = False) -> LazyArray:
+    """Wrap a concrete array as a graph leaf.
+
+    ``pin=True`` homes the buffer on a device up front (weights that many
+    graph nodes will consume): the scheduler credits it as resident in every
+    launch that touches it and placement-affine scheduling is drawn to it.
+    """
+    if isinstance(obj, LazyArray):
+        return obj.astype(dtype) if dtype is not None else obj
+    node = leaf(obj, dtype=dtype)
+    if pin and node.dtype is not None:
+        from repro.core.hero import engine
+
+        node.attrs["handle"] = engine().pin_handle(
+            f"hnp-leaf-{node.id}", node.nbytes
+        )
+    return LazyArray(node)
+
+
+def asarray(obj, dtype=None) -> LazyArray:
+    return array(obj, dtype=dtype)
+
+
+def asnumpy(x) -> np.ndarray:
+    """Force evaluation (lower the captured graph) and return a numpy array.
+
+    ``LazyArray.__array__`` does the forcing, so plain ``np.asarray`` covers
+    lazy and concrete inputs alike."""
+    return np.asarray(x)
+
+
+def block(x: LazyArray) -> LazyArray:
+    """Force evaluation of a lazy array in place (returns it)."""
+    if isinstance(x, LazyArray):
+        return x.block()
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Linear algebra sugar (everything heavy goes through the registry)
+# ---------------------------------------------------------------------------
+
+def matmul(a, b, *, out_dtype=None) -> LazyArray:
+    return LazyArray(registry_node("matmul", (a, b), {"out_dtype": out_dtype}))
+
+
+def linear(x, w, b=None, *, out_dtype=None) -> LazyArray:
+    """y = x @ w (+ b).  The bias add is an elementwise consumer of the
+    matmul, so the scheduler fuses it into the GEMM launch."""
+    y = matmul(x, w, out_dtype=out_dtype)
+    if b is not None:
+        y = y + (b if isinstance(b, LazyArray) else LazyArray(lift(b)))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / reductions
+# ---------------------------------------------------------------------------
+
+def _unary(op):
+    def fn(x) -> LazyArray:
+        return LazyArray(_elementwise_unary(op, lift(x)))
+
+    fn.__name__ = op
+    fn.__doc__ = f"Lazy elementwise {op} (fusible into its producer)."
+    return fn
+
+
+def _binary(op):
+    def fn(a, b) -> LazyArray:
+        return LazyArray(_elementwise_binary(op, lift(a), lift(b)))
+
+    fn.__name__ = op
+    fn.__doc__ = f"Lazy elementwise {op} (fusible into its producer)."
+    return fn
+
+
+tanh = _unary("tanh")
+exp = _unary("exp")
+sqrt = _unary("sqrt")
+abs = _unary("abs")  # noqa: A001 — numpy-style namespace shadows builtins
+relu = _unary("relu")
+silu = _unary("silu")
+gelu = _unary("gelu")
+sigmoid = _unary("sigmoid")
+
+add = _binary("add")
+subtract = _binary("sub")
+multiply = _binary("mul")
+divide = _binary("div")
+maximum = _binary("maximum")
+minimum = _binary("minimum")
+power = _binary("pow")
+
+
+def _reduction(op):
+    def fn(x, axis=None, keepdims: bool = False) -> LazyArray:
+        return getattr(array(x), op)(axis=axis, keepdims=keepdims)
+
+    fn.__name__ = op
+    fn.__doc__ = f"Lazy {op} reduction."
+    return fn
+
+
+sum = _reduction("sum")  # noqa: A001 — numpy-style namespace shadows builtins
+mean = _reduction("mean")
+max = _reduction("max")  # noqa: A001
+min = _reduction("min")  # noqa: A001
+
+
+# ---------------------------------------------------------------------------
+# Registry passthrough: every registered OffloadOp appears in hnp for free
+# ---------------------------------------------------------------------------
+
+def registry_ops() -> tuple:
+    """Names of the registered ops reachable through this namespace."""
+    import repro.core.blas  # noqa: F401 — populate the registry
+    from repro.core.dispatch import registered_ops
+
+    return registered_ops()
+
+
+def __getattr__(name: str):
+    """PEP-562 fallback: resolve unknown attributes against the op registry.
+
+    ``hnp.<op>(*args, **kwargs)`` builds a heavy graph node for any
+    registered :class:`~repro.core.dispatch.OffloadOp` — new descriptors
+    appear here with zero frontend changes.
+    """
+    if name.startswith("_"):
+        raise AttributeError(name)
+    try:
+        ops = registry_ops()
+    except Exception as e:  # pragma: no cover — registry import failure
+        raise AttributeError(f"{name} (registry unavailable: {e})") from None
+    if name not in ops:
+        raise AttributeError(
+            f"module 'repro.hnp' has no attribute {name!r} "
+            f"(registered ops: {', '.join(builtins.sorted(ops))})"
+        )
+
+    def op_fn(*args, **kwargs) -> LazyArray:
+        return LazyArray(registry_node(name, args, kwargs))
+
+    op_fn.__name__ = name
+    op_fn.__qualname__ = name
+    op_fn.__doc__ = (
+        f"Lazy graph capture of registered offload op {name!r} "
+        "(see repro.core.dispatch)."
+    )
+    globals()[name] = op_fn  # cache for subsequent lookups
+    return op_fn

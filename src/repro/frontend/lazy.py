@@ -1,0 +1,469 @@
+"""Lazy expression graph behind ``repro.hnp``.
+
+The paper's value proposition is *transparency*: a plain NumPy program gets
+accelerated because the library underneath makes the offload decisions.
+This module is the capture half of that story — array operations build an
+expression graph of :class:`Node` s instead of executing, so the scheduler
+(:mod:`repro.frontend.schedule`) can lower the *whole* computation onto the
+offload registry: fuse elementwise epilogues into their producer, batch
+independent GEMMs, and keep device-resident intermediates on device.
+
+Import-light by contract: this module imports only the standard library and
+numpy at module scope (jax and the offload seam load lazily at graph-build /
+evaluation time).  ``make collect`` gates every ``repro.frontend`` module
+import under one second.
+
+Node kinds:
+
+* ``leaf``             — a concrete array (or Python scalar) fed into the
+                         graph by :func:`repro.hnp.array` / operator lifting;
+* ``registry:<op>``    — a *heavy* node lowered through the declarative op
+                         registry (``core/dispatch.py``); any registered
+                         ``OffloadOp`` appears in ``hnp`` for free;
+* elementwise / reduction / shape nodes — light ops executed with ``jnp``
+                         during evaluation; single-consumer elementwise
+                         chains are fused into their producer's lowering.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ELEMENTWISE",
+    "ELEMENTWISE_BINARY",
+    "ELEMENTWISE_UNARY",
+    "LazyArray",
+    "Node",
+    "REDUCTIONS",
+    "SHAPE_OPS",
+    "is_heavy",
+    "leaf",
+    "lift",
+    "registry_node",
+]
+
+_IDS = itertools.count()
+
+ELEMENTWISE_UNARY = frozenset({
+    "tanh", "exp", "sqrt", "abs", "neg", "relu", "silu", "gelu", "sigmoid",
+})
+ELEMENTWISE_BINARY = frozenset({
+    "add", "sub", "mul", "div", "maximum", "minimum", "pow",
+})
+ELEMENTWISE = ELEMENTWISE_UNARY | ELEMENTWISE_BINARY
+REDUCTIONS = frozenset({"sum", "mean", "max", "min"})
+SHAPE_OPS = frozenset({"reshape", "transpose", "astype"})
+
+_UNSET = object()
+
+
+def is_heavy(op: str) -> bool:
+    """Heavy nodes lower through the offload registry (one dispatch each)."""
+    return op.startswith("registry:")
+
+
+def _result_dtype(*dtypes):
+    """Promotion over the array operands (Python scalars are weak: they
+    never widen an array dtype, loosely matching JAX's weak typing)."""
+    dts = [d for d in dtypes if d is not None]
+    if not dts:
+        return np.dtype(np.float32)
+    if all(d == dts[0] for d in dts):
+        return dts[0]
+    try:
+        return np.result_type(*dts)
+    except TypeError:
+        # bf16 et al. only promote through jnp's lattice
+        import jax.numpy as jnp
+
+        return jnp.result_type(*dts)
+
+
+def _broadcast_shapes(*shapes):
+    return np.broadcast_shapes(*shapes)
+
+
+class Node:
+    """One vertex of the expression graph.
+
+    ``attrs`` holds the static (non-array) part of the call.  For registry
+    nodes it carries a call template so the scheduler can rebuild the exact
+    positional/keyword signature around the evaluated inputs.  ``value``
+    caches the evaluated result so shared subgraphs execute once.
+    """
+
+    __slots__ = ("id", "op", "inputs", "attrs", "shape", "dtype", "_value")
+
+    def __init__(
+        self,
+        op: str,
+        inputs: Sequence["Node"],
+        attrs: Optional[Dict[str, Any]],
+        shape: Tuple[int, ...],
+        dtype,
+    ) -> None:
+        self.id = next(_IDS)
+        self.op = op
+        self.inputs = tuple(inputs)
+        self.attrs = attrs or {}
+        self.shape = tuple(int(d) for d in shape)
+        self.dtype = dtype
+        self._value = _UNSET
+
+    # ---- cached evaluation ------------------------------------------------
+    @property
+    def evaluated(self) -> bool:
+        return self._value is not _UNSET
+
+    @property
+    def value(self):
+        if self._value is _UNSET:
+            raise RuntimeError(f"node {self.id} ({self.op}) not evaluated")
+        return self._value
+
+    def set_value(self, v) -> None:
+        self._value = v
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    @property
+    def nbytes(self) -> float:
+        if self.dtype is None:
+            return 0.0
+        return float(self.size) * np.dtype(self.dtype).itemsize
+
+    def __repr__(self) -> str:
+        return (
+            f"Node(id={self.id}, op={self.op!r}, shape={self.shape}, "
+            f"dtype={self.dtype})"
+        )
+
+
+def leaf(x, dtype=None) -> Node:
+    """Wrap a concrete array (or Python scalar) as a graph input."""
+    if isinstance(x, LazyArray):
+        return x.node
+    if isinstance(x, Node):
+        return x
+    if isinstance(x, (bool, int, float, complex)):
+        n = Node("leaf", (), {"weak": True}, (), None)
+        n.set_value(x)
+        return n
+    if dtype is not None and getattr(x, "dtype", None) != dtype:
+        import jax.numpy as jnp
+
+        x = jnp.asarray(x, dtype)
+    shape = tuple(getattr(x, "shape", np.shape(x)))
+    dt = getattr(x, "dtype", None)
+    if dt is None:
+        x = np.asarray(x)
+        dt = x.dtype
+        shape = x.shape
+    n = Node("leaf", (), {}, shape, dt)
+    n.set_value(x)
+    return n
+
+
+def lift(x) -> Node:
+    return leaf(x)
+
+
+# ---------------------------------------------------------------------------
+# Node constructors
+# ---------------------------------------------------------------------------
+
+def _elementwise_unary(op: str, x: Node) -> Node:
+    return Node(op, (x,), {}, x.shape, x.dtype)
+
+
+def _elementwise_binary(op: str, a: Node, b: Node) -> Node:
+    shape = _broadcast_shapes(a.shape, b.shape)
+    dtype = _result_dtype(a.dtype, b.dtype)
+    return Node(op, (a, b), {}, shape, dtype)
+
+
+def _reduction(op: str, x: Node, axis=None, keepdims: bool = False) -> Node:
+    if axis is None:
+        axes = tuple(range(x.ndim))
+    else:
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        axes = tuple(a % x.ndim for a in axes)
+    if keepdims:
+        shape = tuple(1 if i in axes else d for i, d in enumerate(x.shape))
+    else:
+        shape = tuple(d for i, d in enumerate(x.shape) if i not in axes)
+    return Node(op, (x,), {"axis": axis, "keepdims": keepdims}, shape, x.dtype)
+
+
+def _spec(node: Node):
+    """ShapeDtypeStruct for abstract evaluation of a registry lowering."""
+    import jax
+
+    return jax.ShapeDtypeStruct(node.shape, node.dtype)
+
+
+def registry_node(opname: str, args: Sequence[Any], kwargs: Dict[str, Any]) -> Node:
+    """Build a heavy node for one registered ``OffloadOp``.
+
+    Array-like operands (lazy or concrete) become graph inputs; everything
+    else stays static in the call template.  Shape/dtype are inferred by
+    abstract evaluation (``jax.eval_shape``) of the op's host lowering, so
+    every registered op — present and future — gets graph capture without
+    frontend changes: *register once, appear in ``hnp`` for free*.
+    """
+    from repro.core.dispatch import get_op
+
+    op = get_op(opname)  # raises KeyError for unknown ops, eagerly
+
+    inputs = []
+    template = []  # per positional slot: ("in", input_index) | ("static", v)
+    kw_inputs = {}  # kw name -> input index
+    static_kwargs = {}
+    for a in args:
+        if isinstance(a, (LazyArray, Node)) or (
+            hasattr(a, "shape") and hasattr(a, "dtype")
+        ):
+            n = lift(a)
+            template.append(("in", len(inputs)))
+            inputs.append(n)
+        else:
+            template.append(("static", a))
+    for k, v in kwargs.items():
+        if isinstance(v, (LazyArray, Node)) or (
+            hasattr(v, "shape") and hasattr(v, "dtype")
+        ):
+            n = lift(v)
+            kw_inputs[k] = len(inputs)
+            inputs.append(n)
+        else:
+            static_kwargs[k] = v
+
+    # Abstract shape/dtype inference through the host lowering.
+    import jax
+
+    def _rebuild(vals):
+        pos = [
+            vals[idx] if kind == "in" else idx
+            for kind, idx in template
+        ]
+        kw = dict(static_kwargs)
+        for k, idx in kw_inputs.items():
+            kw[k] = vals[idx]
+        return pos, kw
+
+    def _abstract(*vals):
+        pos, kw = _rebuild(list(vals))
+        return op.host(*pos, **kw)
+
+    specs = [_spec(n) if n.dtype is not None else n.value for n in inputs]
+    out = jax.eval_shape(_abstract, *specs)
+    if not hasattr(out, "shape"):
+        raise TypeError(
+            f"registry op {opname!r} host lowering returned a non-array; "
+            "cannot capture it in an hnp graph"
+        )
+    attrs = {
+        "name": opname,
+        "template": tuple(template),
+        "kw_inputs": dict(kw_inputs),
+        "kwargs": dict(static_kwargs),
+    }
+    return Node(f"registry:{opname}", inputs, attrs, out.shape, out.dtype)
+
+
+def rebuild_call(node: Node, values: Sequence[Any]):
+    """Reconstruct (args, kwargs) of a registry node around input values."""
+    pos = [
+        values[idx] if kind == "in" else idx
+        for kind, idx in node.attrs["template"]
+    ]
+    kw = dict(node.attrs["kwargs"])
+    for k, idx in node.attrs["kw_inputs"].items():
+        kw[k] = values[idx]
+    return pos, kw
+
+
+# ---------------------------------------------------------------------------
+# LazyArray — the user-facing ndarray stand-in
+# ---------------------------------------------------------------------------
+
+class LazyArray:
+    """NumPy-like array whose operations build an expression graph.
+
+    Nothing executes until the array is forced — ``hnp.asnumpy(x)``,
+    ``x.block()``, ``np.asarray(x)`` or ``float(x)`` — at which point the
+    scheduler lowers the whole captured graph onto the offload registry.
+    """
+
+    __slots__ = ("node",)
+
+    # win over np.ndarray in mixed binary ops (ndarray op LazyArray)
+    __array_priority__ = 1000
+
+    def __init__(self, node: Node) -> None:
+        self.node = node
+
+    # ---- metadata ---------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.node.shape
+
+    @property
+    def dtype(self):
+        return self.node.dtype
+
+    @property
+    def ndim(self) -> int:
+        return self.node.ndim
+
+    @property
+    def size(self) -> int:
+        return self.node.size
+
+    @property
+    def nbytes(self) -> float:
+        return self.node.nbytes
+
+    def __len__(self) -> int:
+        if not self.shape:
+            raise TypeError("len() of unsized LazyArray")
+        return self.shape[0]
+
+    def __repr__(self) -> str:
+        state = "evaluated" if self.node.evaluated else "lazy"
+        return (
+            f"LazyArray(shape={self.shape}, dtype={self.dtype}, "
+            f"op={self.node.op!r}, {state})"
+        )
+
+    # ---- forcing ----------------------------------------------------------
+    def block(self) -> "LazyArray":
+        """Force evaluation of the captured graph (result cached)."""
+        from repro.frontend import schedule
+
+        schedule.evaluate(self.node)
+        return self
+
+    def __array__(self, dtype=None):
+        out = np.asarray(self.block().node.value)
+        return out.astype(dtype) if dtype is not None else out
+
+    def __float__(self) -> float:
+        return float(np.asarray(self))
+
+    def __int__(self) -> int:
+        return int(np.asarray(self))
+
+    def __bool__(self) -> bool:
+        return bool(np.asarray(self))
+
+    # ---- graph-building operators -----------------------------------------
+    def _binary(self, op: str, other, reflected: bool = False) -> "LazyArray":
+        a, b = lift(self), lift(other)
+        if reflected:
+            a, b = b, a
+        return LazyArray(_elementwise_binary(op, a, b))
+
+    def __add__(self, o):
+        return self._binary("add", o)
+
+    def __radd__(self, o):
+        return self._binary("add", o, reflected=True)
+
+    def __sub__(self, o):
+        return self._binary("sub", o)
+
+    def __rsub__(self, o):
+        return self._binary("sub", o, reflected=True)
+
+    def __mul__(self, o):
+        return self._binary("mul", o)
+
+    def __rmul__(self, o):
+        return self._binary("mul", o, reflected=True)
+
+    def __truediv__(self, o):
+        return self._binary("div", o)
+
+    def __rtruediv__(self, o):
+        return self._binary("div", o, reflected=True)
+
+    def __pow__(self, o):
+        return self._binary("pow", o)
+
+    def __neg__(self):
+        return LazyArray(_elementwise_unary("neg", lift(self)))
+
+    def __abs__(self):
+        return LazyArray(_elementwise_unary("abs", lift(self)))
+
+    def __matmul__(self, other) -> "LazyArray":
+        return LazyArray(registry_node("matmul", (self, other), {}))
+
+    def __rmatmul__(self, other) -> "LazyArray":
+        return LazyArray(registry_node("matmul", (other, self), {}))
+
+    # ---- shape ops ---------------------------------------------------------
+    def reshape(self, *shape) -> "LazyArray":
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        n = self.size
+        shape = tuple(int(d) for d in shape)
+        if -1 in shape:
+            rest = 1
+            for d in shape:
+                if d != -1:
+                    rest *= d
+            shape = tuple(n // rest if d == -1 else d for d in shape)
+        node = Node(
+            "reshape", (self.node,), {"shape": shape}, shape, self.dtype
+        )
+        return LazyArray(node)
+
+    def transpose(self, *axes) -> "LazyArray":
+        if len(axes) == 1 and isinstance(axes[0], (tuple, list)):
+            axes = tuple(axes[0])
+        if not axes:
+            axes = tuple(reversed(range(self.ndim)))
+        shape = tuple(self.shape[a] for a in axes)
+        node = Node(
+            "transpose", (self.node,), {"axes": axes}, shape, self.dtype
+        )
+        return LazyArray(node)
+
+    @property
+    def T(self) -> "LazyArray":
+        return self.transpose()
+
+    def astype(self, dtype) -> "LazyArray":
+        node = Node(
+            "astype", (self.node,), {"dtype": dtype}, self.shape, dtype
+        )
+        return LazyArray(node)
+
+    # ---- reductions --------------------------------------------------------
+    def sum(self, axis=None, keepdims: bool = False) -> "LazyArray":
+        return LazyArray(_reduction("sum", self.node, axis, keepdims))
+
+    def mean(self, axis=None, keepdims: bool = False) -> "LazyArray":
+        return LazyArray(_reduction("mean", self.node, axis, keepdims))
+
+    def max(self, axis=None, keepdims: bool = False) -> "LazyArray":
+        return LazyArray(_reduction("max", self.node, axis, keepdims))
+
+    def min(self, axis=None, keepdims: bool = False) -> "LazyArray":
+        return LazyArray(_reduction("min", self.node, axis, keepdims))

@@ -1,0 +1,598 @@
+"""Graph scheduler — lowers a lazy ``hnp`` expression graph onto the
+offload registry.
+
+Where eager ``repro.core.blas`` calls pay host<->device staging per op and
+the cluster scheduler never sees more than one call ahead, this module sees
+the *shape of the whole computation* (Pirova et al.) and exploits it:
+
+* **topological waves** — independent ops surface together, so the cluster
+  scheduler can spread them across lanes;
+* **elementwise fusion** — a single-consumer elementwise chain (bias add,
+  ``tanh``, ``silu`` ...) folds into its producer's lowering: no extra
+  dispatch record, no staging for the chain's intermediates;
+* **GEMM batching** — same-shape independent 2-D GEMMs in one wave stack
+  into a single ``gemm_batched`` launch (one fork/join instead of N);
+* **residency threading** — the key win: an intermediate produced on a
+  device *stays* device-resident for its consumers instead of round-tripping
+  through host DRAM.  Each heavy node dispatches with the exact fraction of
+  its operand/result bytes already (or staying) on device, and cross-device
+  consumption is charged over the d2d link (``migrate_handle``), riding the
+  DMA stream in the overlap timeline.
+
+Import-light by contract: jax and the offload seam are imported inside
+functions (``make collect`` gates frontend import time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.frontend.lazy import (
+    ELEMENTWISE,
+    Node,
+    is_heavy,
+    rebuild_call,
+)
+
+__all__ = [
+    "GraphReport",
+    "GraphRegion",
+    "NodeReport",
+    "current_region",
+    "evaluate",
+    "offload_region",
+]
+
+_REGION_IDS = itertools.count()
+
+# Registry ops whose independent same-shape 2-D instances can stack into one
+# gemm_batched launch.
+_BATCHABLE = frozenset({"registry:matmul", "registry:gemm"})
+
+
+# ---------------------------------------------------------------------------
+# Reports
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NodeReport:
+    """Accounting view of one heavy (registry-dispatched) graph node."""
+
+    node_id: int
+    op: str
+    backend: str
+    device_id: int
+    resident_fraction: float
+    staged_in_bytes: float      # host->device bytes paid for operands
+    readback_bytes: float       # device->host bytes paid for the result
+    fused: Tuple[str, ...] = ()  # elementwise ops folded into this launch
+    batched: bool = False        # member of a stacked gemm_batched launch
+
+
+@dataclasses.dataclass
+class GraphReport:
+    """Rollup of every dispatch the scheduler issued for one graph scope."""
+
+    name: str
+    launches: List[NodeReport] = dataclasses.field(default_factory=list)
+
+    @property
+    def staged_in_bytes(self) -> float:
+        return sum(r.staged_in_bytes for r in self.launches)
+
+    @property
+    def readback_bytes(self) -> float:
+        return sum(r.readback_bytes for r in self.launches)
+
+    @property
+    def staged_bytes(self) -> float:
+        return self.staged_in_bytes + self.readback_bytes
+
+    @property
+    def fused_ops(self) -> int:
+        return sum(len(r.fused) for r in self.launches)
+
+    @property
+    def batched_launches(self) -> int:
+        return sum(1 for r in self.launches if r.batched)
+
+    def summary(self) -> str:
+        return (
+            f"graph {self.name!r}: {len(self.launches)} launches, "
+            f"{self.fused_ops} fused elementwise ops, "
+            f"{self.batched_launches} batched GEMMs, "
+            f"staged_in={self.staged_in_bytes:.0f}B "
+            f"readback={self.readback_bytes:.0f}B"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Graph regions — scope residency + handle lifetimes over many evaluations
+# ---------------------------------------------------------------------------
+
+class GraphRegion:
+    """Scope for one logical graph: shared residency map, owned handles,
+    accumulated report.
+
+    Used directly as the ``hnp.offload_region()`` context manager.  All
+    evaluations inside share intermediate residency (an intermediate forced
+    by one ``asnumpy`` stays device-resident for the next expression), and
+    every handle the scheduler pinned is released when the region closes —
+    the multi-op handle-lifetime contract on :class:`HeroCluster`.
+    """
+
+    def __init__(self, name: Optional[str] = None) -> None:
+        self.name = name or f"hnp-graph-{next(_REGION_IDS)}"
+        self.residency: Dict[int, Any] = {}   # node id -> DeviceHandle
+        self.owned: set = set()               # handle names we pinned
+        self.report = GraphReport(self.name)
+
+    # -- residency ----------------------------------------------------------
+    def handle_for(self, node: Node):
+        """Valid residency handle for a node's value, if any (scheduler-owned
+        intermediates, or user-pinned leaves via ``hnp.array(pin=True)``)."""
+        h = self.residency.get(node.id)
+        if h is None:
+            h = node.attrs.get("handle")
+        if h is not None and getattr(h, "valid", False):
+            return h
+        return None
+
+    def pin(self, node: Node, device_id: int) -> None:
+        from repro.core.hero import engine
+
+        h = engine().pin_handle(
+            f"{self.name}:n{node.id}", node.nbytes, device_id=device_id
+        )
+        self.residency[node.id] = h
+        self.owned.add(h.name)
+
+    def release(self) -> None:
+        from repro.core.hero import engine
+
+        eng = engine()
+        for name in sorted(self.owned):
+            h = eng.handle(name)
+            if h is not None:
+                eng.release_handle(h)
+        self.owned.clear()
+        self.residency.clear()
+
+    # -- context manager ------------------------------------------------------
+    def __enter__(self) -> "GraphRegion":
+        _REGION_STACK.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _REGION_STACK.pop()
+        self.release()
+
+
+_REGION_STACK: List[GraphRegion] = []
+
+
+def current_region() -> Optional[GraphRegion]:
+    return _REGION_STACK[-1] if _REGION_STACK else None
+
+
+# Public alias: ``with hnp.offload_region("step") as region: ...``
+offload_region = GraphRegion
+
+
+# ---------------------------------------------------------------------------
+# Light-op lowering (elementwise / reductions / shape ops via jnp)
+# ---------------------------------------------------------------------------
+
+def _lower_light(op: str, attrs: Dict[str, Any], vals: Sequence[Any]):
+    import jax
+    import jax.numpy as jnp
+
+    if op == "add":
+        return vals[0] + vals[1]
+    if op == "sub":
+        return vals[0] - vals[1]
+    if op == "mul":
+        return vals[0] * vals[1]
+    if op == "div":
+        return vals[0] / vals[1]
+    if op == "pow":
+        return vals[0] ** vals[1]
+    if op == "maximum":
+        return jnp.maximum(vals[0], vals[1])
+    if op == "minimum":
+        return jnp.minimum(vals[0], vals[1])
+    if op == "neg":
+        return -vals[0]
+    if op == "abs":
+        return jnp.abs(vals[0])
+    if op == "tanh":
+        return jnp.tanh(vals[0])
+    if op == "exp":
+        return jnp.exp(vals[0])
+    if op == "sqrt":
+        return jnp.sqrt(vals[0])
+    if op == "relu":
+        return jax.nn.relu(vals[0])
+    if op == "silu":
+        return jax.nn.silu(vals[0])
+    if op == "gelu":
+        return jax.nn.gelu(vals[0])
+    if op == "sigmoid":
+        return jax.nn.sigmoid(vals[0])
+    if op in ("sum", "mean", "max", "min"):
+        fn = {"sum": jnp.sum, "mean": jnp.mean, "max": jnp.max,
+              "min": jnp.min}[op]
+        return fn(
+            vals[0], axis=attrs.get("axis"),
+            keepdims=bool(attrs.get("keepdims", False)),
+        )
+    if op == "reshape":
+        return jnp.reshape(vals[0], attrs["shape"])
+    if op == "transpose":
+        return jnp.transpose(vals[0], attrs["axes"])
+    if op == "astype":
+        return jnp.asarray(vals[0]).astype(attrs["dtype"])
+    raise NotImplementedError(f"no lowering for light op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Fusion analysis
+# ---------------------------------------------------------------------------
+
+def _fusion_chains(
+    order: List[Node],
+    consumers: Dict[int, List[Node]],
+) -> Tuple[Dict[int, List[Node]], Dict[int, int]]:
+    """Maximal single-consumer elementwise chains hanging off heavy nodes.
+
+    A node fuses into its producer's launch when it is elementwise, it is the
+    producer's only consumer in the forced subgraph, and every *other*
+    operand is already available (a leaf or previously-evaluated node — the
+    bias-add case).  Returns ``(chains, fused_into)``: per-head fused chain
+    in application order, and a membership map.
+    """
+    chains: Dict[int, List[Node]] = {}
+    fused_into: Dict[int, int] = {}
+    for head in order:
+        if not is_heavy(head.op):
+            continue
+        chain: List[Node] = []
+        tail = head
+        while True:
+            cs = consumers.get(tail.id, [])
+            if len(cs) != 1:
+                break
+            e = cs[0]
+            if e.op not in ELEMENTWISE or e.id in fused_into:
+                break
+            side = [i for i in e.inputs if i is not tail]
+            if any(not s.evaluated for s in side):
+                break
+            chain.append(e)
+            fused_into[e.id] = head.id
+            tail = e
+        if chain:
+            chains[head.id] = chain
+    return chains, fused_into
+
+
+def _apply_chain(head_value, chain: List[Node], prev: Node):
+    """Run a fused elementwise chain on the producer's value, caching each
+    link's value (shared-subgraph coherence)."""
+    value = head_value
+    tail = prev
+    for e in chain:
+        vals = [value if i is tail else i.value for i in e.inputs]
+        value = _lower_light(e.op, e.attrs, vals)
+        e.set_value(value)
+        tail = e
+    return value
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+def _collect(root: Node) -> List[Node]:
+    """Postorder over the unevaluated subgraph reachable from ``root``."""
+    order: List[Node] = []
+    seen = set()
+    stack: List[Tuple[Node, bool]] = [(root, False)]
+    while stack:
+        node, expanded = stack.pop()
+        if node.id in seen:
+            continue
+        if node.evaluated:
+            seen.add(node.id)
+            continue
+        if expanded:
+            seen.add(node.id)
+            order.append(node)
+            continue
+        stack.append((node, True))
+        for inp in node.inputs:
+            if not inp.evaluated and inp.id not in seen:
+                stack.append((inp, False))
+    return order
+
+
+def _array_inputs(node: Node) -> List[Node]:
+    return [i for i in node.inputs if i.dtype is not None]
+
+
+def _residency_split(node: Node, region: GraphRegion):
+    """(resident_bytes, total_in_bytes, best_handle) over a node's operands."""
+    resident = 0.0
+    total = 0.0
+    best = None
+    best_bytes = -1.0
+    for inp in _array_inputs(node):
+        total += inp.nbytes
+        h = region.handle_for(inp)
+        if h is not None:
+            resident += inp.nbytes
+            if inp.nbytes > best_bytes:
+                best, best_bytes = h, inp.nbytes
+    return resident, total, best
+
+
+def _migrate_inputs(node: Node, device_id: int, region: GraphRegion) -> None:
+    """Bring scheduler-owned resident inputs to the consuming device.
+
+    Charged as ``d2d_copy`` records on the destination's DMA stream — the
+    modeled price of consuming an intermediate on a different lane than the
+    one that produced it.  User-pinned leaves are never moved (their home is
+    the user's contract); affinity scheduling is what keeps work near them.
+    """
+    from repro.core.hero import engine
+
+    for inp in _array_inputs(node):
+        h = region.handle_for(inp)
+        if (
+            h is not None
+            and h.device_id != device_id
+            and h.name in region.owned
+        ):
+            engine().migrate_handle(h, device_id)
+
+
+def _run_heavy(
+    node: Node,
+    chains: Dict[int, List[Node]],
+    roots: set,
+    region: GraphRegion,
+) -> None:
+    """Dispatch one heavy node (plus its fused chain) through the registry."""
+    from repro.core.dispatch import dispatch_placed
+
+    chain = chains.get(node.id, [])
+    tail = chain[-1] if chain else node
+    vals = [i.value for i in node.inputs]
+    resident_in, in_total, aff = _residency_split(node, region)
+    out_nbytes = tail.nbytes
+    keep_out = tail.id not in roots
+    total = in_total + out_nbytes
+    rf = ((resident_in + (out_nbytes if keep_out else 0.0)) / total
+          if total > 0 else 0.0)
+
+    args, kwargs = rebuild_call(node, vals)
+    opname = node.op.split(":", 1)[1]
+    value, launch = dispatch_placed(
+        opname, *args, resident_fraction=rf, handle=aff, **kwargs
+    )
+    node.set_value(value)
+    offloaded = launch.backend.startswith("device")
+    if offloaded:
+        _migrate_inputs(node, launch.device_id, region)
+    final = _apply_chain(value, chain, node) if chain else value
+    tail.set_value(final)
+    if offloaded:
+        # Forcing a root reads a *copy* back to host — the device buffer
+        # stays valid for later consumers in the same region, so pin
+        # unconditionally (rf already excluded the root's readback bytes).
+        region.pin(tail, launch.device_id)
+    region.report.launches.append(NodeReport(
+        node_id=node.id,
+        op=opname,
+        backend=launch.backend,
+        device_id=launch.device_id,
+        resident_fraction=rf,
+        staged_in_bytes=(in_total - resident_in) if offloaded else 0.0,
+        readback_bytes=out_nbytes if (offloaded and not keep_out) else 0.0,
+        fused=tuple(e.op for e in chain),
+        batched=False,
+    ))
+
+
+def _batch_key(node: Node):
+    """Stacking key for independent same-shape 2-D GEMMs (None = unbatchable)."""
+    if node.op not in _BATCHABLE or len(node.inputs) != 2:
+        return None
+    if node.attrs["kw_inputs"]:
+        return None
+    if any(kind != "in" for kind, _ in node.attrs["template"]):
+        return None
+    if any(bool(v) for v in node.attrs["kwargs"].values()):
+        return None  # transposes / tp_mode / explicit out_dtype opt out
+    a, b = node.inputs
+    if a.ndim != 2 or b.ndim != 2:
+        return None
+    return (a.shape, b.shape, str(a.dtype), str(b.dtype))
+
+
+def _run_batched(
+    members: List[Node],
+    chains: Dict[int, List[Node]],
+    roots: set,
+    region: GraphRegion,
+) -> None:
+    """Stack N independent same-shape GEMMs into one gemm_batched launch."""
+    import jax.numpy as jnp
+
+    from repro.core.dispatch import dispatch_placed
+
+    resident_in = in_total = out_total = keep_bytes = 0.0
+    aff = None
+    aff_bytes = -1.0
+    tails = []
+    splits = []
+    for n in members:
+        chain = chains.get(n.id, [])
+        tail = chain[-1] if chain else n
+        tails.append(tail)
+        r, t, h = _residency_split(n, region)
+        splits.append((r, t))
+        resident_in += r
+        in_total += t
+        out_total += tail.nbytes
+        if tail.id not in roots:
+            keep_bytes += tail.nbytes
+        if h is not None and h.nbytes > aff_bytes:
+            aff, aff_bytes = h, h.nbytes
+    total = in_total + out_total
+    rf = (resident_in + keep_bytes) / total if total > 0 else 0.0
+
+    a_stack = jnp.stack([jnp.asarray(n.inputs[0].value) for n in members])
+    b_stack = jnp.stack([jnp.asarray(n.inputs[1].value) for n in members])
+    out, launch = dispatch_placed(
+        "gemm_batched", a_stack, b_stack, resident_fraction=rf, handle=aff
+    )
+    offloaded = launch.backend.startswith("device")
+    for i, (n, tail) in enumerate(zip(members, tails)):
+        chain = chains.get(n.id, [])
+        value = out[i]
+        n.set_value(value)
+        if offloaded:
+            _migrate_inputs(n, launch.device_id, region)
+        final = _apply_chain(value, chain, n) if chain else value
+        tail.set_value(final)
+        keep = tail.id not in roots
+        if offloaded:
+            region.pin(tail, launch.device_id)
+        r, t = splits[i]
+        region.report.launches.append(NodeReport(
+            node_id=n.id,
+            op=n.op.split(":", 1)[1],
+            backend=launch.backend,
+            device_id=launch.device_id,
+            resident_fraction=rf,
+            staged_in_bytes=(t - r) if offloaded else 0.0,
+            readback_bytes=tail.nbytes if (offloaded and not keep) else 0.0,
+            fused=tuple(e.op for e in chain),
+            batched=True,
+        ))
+
+
+def _run_light_node(node: Node, region: GraphRegion) -> None:
+    """Evaluate a light node; inherit device residency when all its array
+    operands already live on one device (the elementwise runs there, so its
+    result does too — a free pin, no staging charged either way, matching
+    the unmodeled ``jnp`` elementwise ops of the eager path)."""
+    vals = [i.value for i in node.inputs]
+    value = _lower_light(node.op, node.attrs, vals)
+    node.set_value(value)
+    arrays = _array_inputs(node)
+    if not arrays:
+        return
+    handles = [region.handle_for(i) for i in arrays]
+    devs = {h.device_id for h in handles if h is not None}
+    if len(devs) == 1 and all(h is not None for h in handles):
+        region.pin(node, devs.pop())
+
+
+def evaluate(root: Node):
+    """Force one graph root: lower the whole captured subgraph onto the
+    offload registry and return the root's value.
+
+    Runs inside the ambient :class:`GraphRegion` if one is open (sharing
+    residency and handle lifetimes with sibling evaluations), else under an
+    ephemeral region whose intermediate handles are released on return.
+    """
+    if root.evaluated:
+        return root.value
+
+    from repro.core import accounting
+
+    region = current_region()
+    ephemeral = region is None
+    if ephemeral:
+        region = GraphRegion()
+    try:
+        with accounting.graph_region(region.name):
+            _schedule(root, region)
+    finally:
+        if ephemeral:
+            region.release()
+    return root.value
+
+
+def _schedule(root: Node, region: GraphRegion) -> None:
+    order = _collect(root)
+    if not order:
+        return
+    in_graph = {n.id for n in order}
+    consumers: Dict[int, List[Node]] = {}
+    deps: Dict[int, int] = {}
+    for n in order:
+        cnt = 0
+        for i in n.inputs:
+            if i.id in in_graph and not i.evaluated:
+                consumers.setdefault(i.id, []).append(n)
+                cnt += 1
+        deps[n.id] = cnt
+    chains, fused_into = _fusion_chains(order, consumers)
+    roots = {root.id}
+
+    by_id = {n.id: n for n in order}
+    ready = sorted(
+        (nid for nid, c in deps.items() if c == 0), key=lambda i: i
+    )
+    done = set()
+
+    def complete(n: Node, frontier: List[int]) -> None:
+        done.add(n.id)
+        for c in consumers.get(n.id, []):
+            deps[c.id] -= 1
+            if deps[c.id] == 0:
+                frontier.append(c.id)
+
+    while ready:
+        wave = [by_id[i] for i in sorted(ready)]
+        ready = []
+        # nodes fused into an earlier head arrive here already evaluated
+        pending_heavy: List[Node] = []
+        for n in wave:
+            if n.evaluated:
+                complete(n, ready)
+            elif is_heavy(n.op):
+                pending_heavy.append(n)
+            else:
+                _run_light_node(n, region)
+                complete(n, ready)
+        # batch same-shape independent GEMMs; dispatch the rest singly
+        groups: Dict[Any, List[Node]] = {}
+        singles: List[Node] = []
+        for n in pending_heavy:
+            key = _batch_key(n)
+            if key is None:
+                singles.append(n)
+            else:
+                groups.setdefault(key, []).append(n)
+        for key, members in groups.items():
+            if len(members) < 2:
+                singles.extend(members)
+        for n in sorted(singles, key=lambda n: n.id):
+            _run_heavy(n, chains, roots, region)
+            complete(n, ready)
+        for key, members in groups.items():
+            if len(members) >= 2:
+                members = sorted(members, key=lambda n: n.id)
+                _run_batched(members, chains, roots, region)
+                for n in members:
+                    complete(n, ready)
+
+    leftover = [n for n in order if n.id not in done and not n.evaluated]
+    if leftover:  # cycles cannot happen by construction; guard anyway
+        raise RuntimeError(f"scheduler failed to evaluate nodes: {leftover}")

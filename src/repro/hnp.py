@@ -1,0 +1,24 @@
+"""``repro.hnp`` — the lazy NumPy-like frontend (alias of
+:mod:`repro.frontend.api`).
+
+::
+
+    import repro.hnp as hnp
+
+    h = hnp.tanh(hnp.array(x) @ w1)
+    y = h @ w2                      # nothing has executed yet
+    out = hnp.asnumpy(y)            # the whole graph lowers onto the cluster
+
+Any op registered in :mod:`repro.core.dispatch` is reachable here by name
+(``hnp.gemm``, ``hnp.attention``, ...) — resolved lazily against the
+registry, so new descriptors appear with zero frontend changes.
+"""
+
+from repro.frontend.api import *  # noqa: F401,F403
+from repro.frontend import api as _api
+from repro.frontend.api import __all__  # noqa: F401
+
+
+def __getattr__(name: str):
+    # Delegate unknown names to the api module's registry passthrough.
+    return getattr(_api, name)

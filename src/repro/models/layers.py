@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blas
-
-from repro.compat import shard_map
+# Re-export: the TP psum dtype policy lives with the seam now (attention.py
+# and ssm.py import it from here).
+from repro.core.blas import psum_cast_dtype  # noqa: F401
 
 __all__ = [
     "rms_norm",
@@ -17,6 +18,7 @@ __all__ = [
     "rope",
     "mrope",
     "mlp_apply",
+    "psum_cast_dtype",
     "init_dense",
     "init_norm",
 ]
@@ -133,105 +135,20 @@ def init_mlp(key, d: int, d_ff: int, dtype, kind: str):
     }
 
 
-def psum_cast_dtype(dtype):
-    """Reduction dtype for TP psums. bf16 on real hardware (halves wire
-    bytes); f32 on the XLA:CPU emulation backend, whose AllReducePromotion
-    pass crashes cloning bf16 all-reduces produced by partially-manual
-    shard_maps (observed: 'Invalid binary instruction opcode copy')."""
-    import jax as _jax
-
-    if _jax.default_backend() == "cpu" and jnp.dtype(dtype) == jnp.bfloat16:
-        return jnp.float32
-    return dtype
-
-
-def _mlp_block_tp(p, x: jax.Array, kind: str, mesh) -> Optional[jax.Array]:
-    """Whole MLP under one shard_map: d_ff column/row slices stay local,
-    ONE bf16 psum forward + one backward (§Perf hillclimb #2).  GSPMD's
-    schedule all-reduces the fp32 products and pays per-projection dX
-    reductions.  Returns None when topology/shapes don't apply."""
-    import numpy as np
-    from jax.sharding import PartitionSpec as P
-
-    if x.ndim != 3 or "model" not in getattr(mesh, "axis_names", ()):
-        return None
-    n_model = mesh.shape["model"]
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
-    d_ff = p["w_up"].shape[1] if "w_up" in p else p["w_gate"].shape[1]
-    if x.shape[0] % n_dp or d_ff % n_model or n_model <= 1:
-        return None
-
-    if kind == "swiglu":
-
-        def local(xl, wg, wu, wd):
-            g = jax.lax.dot_general(xl, wg, (((2,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-            u = jax.lax.dot_general(xl, wu, (((2,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-            h = (jax.nn.silu(g) * u).astype(xl.dtype)
-            y = jax.lax.dot_general(h, wd, (((2,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-            y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
-            return y.astype(xl.dtype)
-
-        fn = shard_map(
-            local, mesh=mesh,
-            in_specs=(P(dp, None, None), P(None, "model"), P(None, "model"),
-                      P("model", None)),
-            out_specs=P(dp, None, None),
-            check_vma=False,
-        )
-        _record_mlp_cost(x, d_ff, 3)
-        return fn(x, p["w_gate"], p["w_up"], p["w_down"])
-
-    def local_gelu(xl, wu, bu, wd, bd):
-        h = jax.lax.dot_general(xl, wu, (((2,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32) + bu
-        h = jax.nn.gelu(h).astype(xl.dtype)
-        y = jax.lax.dot_general(h, wd, (((2,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
-        return y.astype(xl.dtype) + bd.astype(xl.dtype)
-
-    fn = shard_map(
-        local_gelu, mesh=mesh,
-        in_specs=(P(dp, None, None), P(None, "model"), P("model"),
-                  P("model", None), P(None)),
-        out_specs=P(dp, None, None),
-        check_vma=False,
-    )
-    _record_mlp_cost(x, d_ff, 2)
-    return fn(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
-
-
-def _record_mlp_cost(x, d_ff, n_mats):
-    from repro.core import cost_model as cm
-    from repro.core.hero import engine
-
-    b, s, d = x.shape
-    engine().launch(
-        cm.gemm_cost(b * s, d_ff * n_mats, d, jnp.dtype(x.dtype).itemsize),
-        dtype=str(x.dtype), shape_key=f"tp-mlp:{x.shape}x{d_ff}",
-        pallas_eligible=True,
-    )
-
-
 def mlp_apply(p, x: jax.Array, kind: str) -> jax.Array:
-    import os as _os
+    """Dense FFN through the registered ``mlp_block`` descriptor.
 
-    from repro.sharding.annotate import _ambient_mesh
-
-    mesh = _ambient_mesh()
-    if mesh is not None and not _os.environ.get("REPRO_DISABLE_TP_MLP"):
-        y = _mlp_block_tp(p, x, kind, mesh)
-        if y is not None:
-            return y
+    Previously this hand-rolled the whole-block TP shard_map (raw
+    ``lax.dot_general`` launch sites bypassing the seam) plus a bare
+    ``engine().launch`` for the cost.  The descriptor now owns all of it:
+    TP applicability is its ``plan``, the dense form its host lowering, the
+    hand-tiled MXU GEMMs its Pallas lowering — one dispatch, one record,
+    placement always threaded."""
     if kind == "swiglu":
-        g = blas.matmul(x, p["w_gate"])
-        u = blas.matmul(x, p["w_up"])
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-        return blas.matmul(h, p["w_down"])
-    h = blas.linear(x, p["w_up"], p["b_up"])
-    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    return blas.linear(h, p["w_down"], p["b_down"])
+        return blas.mlp_block(
+            x, p["w_up"], p["w_down"], gate=p["w_gate"], kind="swiglu"
+        )
+    return blas.mlp_block(
+        x, p["w_up"], p["w_down"], b_up=p["b_up"], b_down=p["b_down"],
+        kind="gelu",
+    )

@@ -48,6 +48,17 @@ def _samples(dtype):
     sq = _arr(24, 40, dtype=dtype)
     ag, xg = _arr(24, 32, dtype=dtype), _arr(32, dtype=dtype)
     v1, v2 = _arr(64, dtype=dtype), _arr(64, dtype=dtype)
+    wg, wu = _arr(32, 48, dtype=dtype), _arr(32, 48, dtype=dtype)
+    wd = _arr(48, 32, dtype=dtype)
+
+    def _mlp_ref():
+        import jax
+
+        xf = x3.astype(jnp.float32)
+        g = (xf @ wg.astype(jnp.float32)).astype(dtype)
+        u = (xf @ wu.astype(jnp.float32)).astype(dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+        return (h.astype(jnp.float32) @ wd.astype(jnp.float32)).astype(dtype)
     return {
         "gemm": (
             lambda: blas.gemm(a2, b2),
@@ -66,6 +77,10 @@ def _samples(dtype):
         "expert_matmul": (
             lambda: blas.expert_matmul(xe, we),
             lambda: ref.moe_gemm_ref(xe, we),
+        ),
+        "mlp_block": (
+            lambda: blas.mlp_block(x3, wu, wd, gate=wg, kind="swiglu"),
+            _mlp_ref,
         ),
         "attention": (
             lambda: blas.attention(q, k, v, causal=True),

@@ -1,0 +1,75 @@
+"""Import-time gate for the lazy frontend (wired into ``make collect``).
+
+``repro.hnp`` is the first thing a user imports, and its whole point is
+transparency — it must not drag jax / the offload engine in at import.  The
+frontend modules are import-light by contract (stdlib + numpy only at module
+scope; everything heavy loads lazily at first use).  This script enforces
+the contract: each ``repro.frontend`` module (and ``repro.hnp``) must import
+in under ``BUDGET_S`` seconds in a *cold* interpreter.  A regression here
+almost always means someone added a module-scope ``import jax`` (or pulled
+in ``repro.core``), which costs seconds, not milliseconds.
+
+Run: PYTHONPATH=src python tools/check_import_time.py
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+BUDGET_S = 1.0
+
+MODULES = (
+    "repro.frontend",
+    "repro.frontend.lazy",
+    "repro.frontend.schedule",
+    "repro.frontend.api",
+    "repro.hnp",
+)
+
+_PROBE = r"""
+import sys, time
+mod = sys.argv[1]
+t0 = time.perf_counter()
+__import__(mod)
+elapsed = time.perf_counter() - t0
+heavy = [m for m in ("jax", "jaxlib") if m in sys.modules]
+print(f"{elapsed:.3f} {','.join(heavy) or '-'}")
+"""
+
+
+def main() -> int:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    failed = False
+    for mod in MODULES:
+        proc = subprocess.run(
+            [sys.executable, "-c", _PROBE, mod],
+            capture_output=True, text=True, env=env, timeout=60,
+        )
+        if proc.returncode != 0:
+            print(f"FAIL {mod}: import error\n{proc.stderr}", file=sys.stderr)
+            failed = True
+            continue
+        elapsed_s, heavy = proc.stdout.split()
+        elapsed = float(elapsed_s)
+        status = "ok" if elapsed <= BUDGET_S else "TOO SLOW"
+        print(f"{status:8s} {mod:28s} {elapsed:.3f}s (budget {BUDGET_S:.1f}s)")
+        if elapsed > BUDGET_S:
+            failed = True
+        if heavy != "-":
+            print(
+                f"FAIL {mod}: module-scope import pulled in {heavy} — "
+                "the frontend must load jax lazily",
+                file=sys.stderr,
+            )
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
