@@ -163,6 +163,67 @@ def _smoke_frontend_graph() -> dict:
     }
 
 
+def _smoke_model_forward() -> dict:
+    """Eager block forward vs graph-captured forward, same model + batch.
+
+    ``forward_mode="graph"`` lowers each block as an hnp expression graph
+    through the same registered descriptors; it must fuse at least one
+    elementwise epilogue (residual/gate) and save staging bytes via
+    per-launch residency threading."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.core import engine, offload_policy, offload_trace
+    from repro.models import build_model
+    from repro.models import forward as F
+
+    cfg = get_arch("yi-6b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size
+        )
+    }
+    model_g = build_model(dataclasses.replace(cfg, forward_mode="graph"))
+
+    def stats(trace):
+        copy, fork, comp, _ = trace.totals()
+        return {
+            "launches": len(trace.offloaded()),
+            "staged_bytes_charged": trace.total_staged_bytes_charged(),
+            "offload_s": copy + fork + comp + trace.total_d2d_s(),
+        }
+
+    with offload_policy(mode="device", num_devices=2, scheduler="cost-aware"):
+        engine().reset()
+        with offload_trace() as t_eager:
+            model.forward(params, batch)
+        engine().reset()
+        with F.capture_reports() as reports:
+            with offload_trace() as t_graph:
+                model_g.forward(params, batch)
+    eager, graph = stats(t_eager), stats(t_graph)
+    fused_launches = sum(
+        1 for rep in reports for launch in rep.launches if launch.fused
+    )
+    return {
+        "arch": cfg.name,
+        "eager": eager,
+        "graph": graph,
+        "fused_launches": fused_launches,
+        "batched_launches": sum(r.batched_launches for r in reports),
+        "nodes_eliminated": sum(r.nodes_eliminated for r in reports),
+        "staging_bytes_saved": (
+            eager["staged_bytes_charged"] - graph["staged_bytes_charged"]
+        ),
+        "modeled_speedup": eager["offload_s"] / max(graph["offload_s"], 1e-30),
+    }
+
+
 def _git_commit() -> str:
     for var in ("GITHUB_SHA", "CI_COMMIT_SHA"):
         if os.environ.get(var):
@@ -181,6 +242,7 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
     accumulates across PRs instead of being overwritten per run."""
     serve = summary["serve_makespan"]
     frontend = summary["frontend_graph"]
+    model_fwd = summary["model_forward"]
     entry = {
         "commit": _git_commit(),
         # CI stamps a reproducible time; local runs fall back to wall clock.
@@ -194,6 +256,9 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
             "serve_pinned_speedup": serve["pinned_speedup"],
             "frontend_modeled_speedup": frontend["modeled_speedup"],
             "frontend_staging_bytes_saved": frontend["staging_bytes_saved"],
+            "model_forward_speedup": model_fwd["modeled_speedup"],
+            "model_forward_staging_saved": model_fwd["staging_bytes_saved"],
+            "model_forward_fused_launches": model_fwd["fused_launches"],
             "elapsed_s": summary["elapsed_s"],
         },
     }
@@ -209,6 +274,7 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
         "cluster_scaling": _smoke_cluster_scaling(),
         "serve_makespan": _smoke_serve_makespan(),
         "frontend_graph": _smoke_frontend_graph(),
+        "model_forward": _smoke_model_forward(),
     }
     summary["elapsed_s"] = time.time() - t0
     with open(out_path, "w") as f:
@@ -216,13 +282,17 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
     _append_trajectory(summary)
     serve = summary["serve_makespan"]
     frontend = summary["frontend_graph"]
+    model_fwd = summary["model_forward"]
     print(
         f"BENCH_offload: gemm_sweep={len(summary['gemm_sweep'])} rows, "
         f"cost-aware 8-dev scaling="
         f"{summary['cluster_scaling']['cost-aware_scaling_8dev']:.2f}x, "
         f"pinned-vs-unpinned serve speedup={serve['pinned_speedup']:.2f}x, "
         f"hnp graph-vs-eager speedup={frontend['modeled_speedup']:.2f}x "
-        f"(staging saved={frontend['staging_bytes_saved']:.0f}B) "
+        f"(staging saved={frontend['staging_bytes_saved']:.0f}B), "
+        f"model graph-forward speedup={model_fwd['modeled_speedup']:.2f}x "
+        f"({model_fwd['fused_launches']} fused launches, "
+        f"staging saved={model_fwd['staging_bytes_saved']:.0f}B) "
         f"-> {out_path} ({summary['elapsed_s']:.1f}s)"
     )
     return summary

@@ -59,6 +59,12 @@ class ArchConfig:
     ssm_num_groups: int = 1
 
     # --- misc ---------------------------------------------------------------
+    # "eager": every block op dispatches through the seam one call at a
+    # time.  "graph": block forwards are captured as lazy `hnp` expression
+    # graphs (models/forward.py) — elementwise epilogues fuse into their
+    # producer launches, independent same-shape projections batch into one
+    # gemm_batched, and intermediates stay device-resident across the block.
+    forward_mode: str = "eager"    # eager | graph
     mlp_kind: str = "swiglu"       # swiglu | gelu
     norm_kind: str = "rmsnorm"     # rmsnorm | layernorm
     norm_eps: float = 1.0e-6

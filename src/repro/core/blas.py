@@ -52,9 +52,13 @@ __all__ = [
     "gemm_batched",
     "linear",
     "mlp_block",
+    "qkv_project",
+    "ssd_scan",
+    "moe_expert_ffn",
     "expert_matmul",
     "attention",
     "attention_math",
+    "decode_attention",
     "psum_cast_dtype",
     "syrk",
     "gemv",
@@ -62,6 +66,11 @@ __all__ = [
     "axpy",
     "scal",
     "nrm2",
+    "reduce_sum",
+    "reduce_mean",
+    "relu",
+    "silu",
+    "rmsnorm_scale",
 ]
 
 # Ops never offloaded to the Pallas path (paper keeps syrk host-only).
@@ -152,6 +161,28 @@ register(OffloadOp(
 ))
 
 
+def _tp_mesh_info():
+    """Ambient model-parallel topology, or None when no TP plan can apply.
+
+    Returns ``(mesh, n_model, dp_axes, n_dp)`` — the shared applicability
+    prologue of every descriptor's TP ``plan`` (pure inspection, safe at
+    trace time).  A single-device model axis counts as "no topology".
+    """
+    from repro.sharding.annotate import _ambient_mesh
+
+    mesh = _ambient_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    n_model = mesh.shape["model"]
+    if n_model <= 1:
+        return None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    import numpy as _np
+
+    n_dp = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    return mesh, n_model, dp, n_dp
+
+
 def _tp_plan(x, w, mode: str):
     """Check whether the explicit-TP shard_map path applies.
 
@@ -159,21 +190,13 @@ def _tp_plan(x, w, mode: str):
     no execution — so the dispatcher can resolve routing *before* recording
     a backend (the trace must name the path that actually ran).
     """
-    from repro.sharding.annotate import _ambient_mesh
-
     if mode not in ("row", "col"):
         return None
-    mesh = _ambient_mesh()
-    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+    info = _tp_mesh_info()
+    if info is None or x.ndim != 3:
         return None
-    if x.ndim != 3:
-        return None
-    n_model = mesh.shape["model"]
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    import numpy as _np
-
-    n_dp = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
-    if x.shape[0] % n_dp or n_model <= 1:
+    mesh, n_model, dp, n_dp = info
+    if x.shape[0] % n_dp:
         return None
     if x.shape[-1] != w.shape[0]:
         return None
@@ -359,20 +382,12 @@ def _mlp_plan(x, w_up, w_down, gate=None, b_up=None, b_down=None, *,
 
     if os.environ.get("REPRO_DISABLE_TP_MLP"):
         return None
-    from repro.sharding.annotate import _ambient_mesh
-
-    mesh = _ambient_mesh()
-    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+    info = _tp_mesh_info()
+    if info is None or x.ndim != 3:
         return None
-    if x.ndim != 3:
-        return None
-    n_model = mesh.shape["model"]
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    import numpy as _np
-
-    n_dp = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    mesh, n_model, dp, n_dp = info
     d_ff = w_up.shape[1]
-    if x.shape[0] % n_dp or d_ff % n_model or n_model <= 1:
+    if x.shape[0] % n_dp or d_ff % n_model:
         return None
     return mesh, dp
 
@@ -479,6 +494,134 @@ register(OffloadOp(
 ))
 
 
+# ---------------------------------------------------------------------------
+# qkv_project — the fused 3-way attention input projection behind one
+# descriptor (mirrors mlp_block).  The attention layer used to hand-roll a
+# whole-block shard_map of raw `lax.dot_general` launches plus bare
+# engine().launch accounting; as a registered op the projection takes the
+# single cost -> plan -> launch -> lower path: the sequence-sharded TP
+# shard_map is its `plan` (projection FLOPs divided over the model axis, one
+# tiled all-gather of the small qkv activations), the concatenated-weight
+# GEMM its host lowering, the hand-tiled MXU matmul its Pallas lowering.
+# ---------------------------------------------------------------------------
+
+def _qkv_dims(x, wq, wk, wv, *, bq=None, bk=None, bv=None):
+    if x.ndim < 2:
+        raise ValueError(f"qkv_project needs batched input, got {x.shape}")
+    d = x.shape[-1]
+    for name, w in (("wq", wq), ("wk", wk), ("wv", wv)):
+        if w.ndim != 2 or w.shape[0] != d:
+            raise ValueError(
+                f"qkv_project: bad {name} {w.shape} for input {x.shape}"
+            )
+    for name, w, b in (("bq", wq, bq), ("bk", wk, bk), ("bv", wv, bv)):
+        if b is not None and tuple(b.shape) != (w.shape[1],):
+            raise ValueError(f"qkv_project: bad bias {name} {b.shape}")
+    m = 1
+    for dim in x.shape[:-1]:
+        m *= dim
+    n = wq.shape[1] + wk.shape[1] + wv.shape[1]
+    return m, d, n
+
+
+def _qkv_cost(x, wq, wk, wv, *, bq=None, bk=None, bv=None):
+    m, d, n = _qkv_dims(x, wq, wk, wv, bq=bq, bk=bk, bv=bv)
+    return cm.gemm_cost(m, n, d, jnp.dtype(x.dtype).itemsize, op="qkv_project")
+
+
+def _qkv_eligible(x, wq, wk, wv, *, bq=None, bk=None, bv=None):
+    m, d, n = _qkv_dims(x, wq, wk, wv, bq=bq, bk=bk, bv=bv)
+    return _pallas_gemm_eligible(m, n, d, x.dtype)
+
+
+def _qkv_concat(x, wq, wk, wv, bq, bk, bv):
+    w = jnp.concatenate([wq, wk, wv], axis=1)
+    if bq is None and bk is None and bv is None:
+        return w, None
+    parts = [
+        b if b is not None else jnp.zeros((wt.shape[1],), x.dtype)
+        for b, wt in ((bq, wq), (bk, wk), (bv, wv))
+    ]
+    return w, jnp.concatenate(parts)
+
+
+def _qkv_host(x, wq, wk, wv, *, bq=None, bk=None, bv=None):
+    w, b = _qkv_concat(x, wq, wk, wv, bq, bk, bv)
+    y = _accum_dot(x, w, (((x.ndim - 1,), (0,)), ((), ())), x.dtype)
+    return y if b is None else y + b.astype(y.dtype)
+
+
+def _qkv_pallas(x, wq, wk, wv, *, bq=None, bk=None, bv=None, interpret=False):
+    m, d, n = _qkv_dims(x, wq, wk, wv, bq=bq, bk=bk, bv=bv)
+    w, b = _qkv_concat(x, wq, wk, wv, bq, bk, bv)
+    y = _kops().pallas_lowering("qkv_project")(
+        x.reshape(m, d), w, out_dtype=x.dtype, interpret=interpret
+    )
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y.reshape(*x.shape[:-1], n)
+
+
+def _qkv_plan(x, wq, wk, wv, *, bq=None, bk=None, bv=None):
+    """Sequence-sharded TP applicability (pure inspection): each model shard
+    projects its sequence slice and the small qkv activations are
+    all-gathered — replicated compute would pay n_model x the FLOPs."""
+    import os
+
+    if os.environ.get("REPRO_DISABLE_TP_ATTN"):
+        return None
+    info = _tp_mesh_info()
+    if info is None or x.ndim != 3:
+        return None
+    mesh, n_model, dp, n_dp = info
+    if x.shape[0] % n_dp or x.shape[1] % n_model:
+        return None
+    return mesh, dp
+
+
+def _qkv_plan_lower(plan, x, wq, wk, wv, *, bq=None, bk=None, bv=None):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    mesh, dp = plan
+    n_model = mesh.shape["model"]
+    w, b = _qkv_concat(x, wq, wk, wv, bq, bk, bv)
+    if b is None:
+        b = jnp.zeros((w.shape[1],), x.dtype)
+
+    def local(xl, wl, bl):
+        s = xl.shape[1]
+        seg = s // n_model
+        idx = lax.axis_index("model")
+        xs = lax.dynamic_slice_in_dim(xl, idx * seg, seg, axis=1)
+        y = lax.dot_general(
+            xs, wl, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(xl.dtype) + bl.astype(xl.dtype)
+        return lax.all_gather(y, "model", axis=1, tiled=True)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None), P(None)),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )
+    return fn(x, w, b)
+
+
+register(OffloadOp(
+    name="qkv_project",
+    cost=_qkv_cost,
+    host=_qkv_host,
+    pallas=_qkv_pallas,
+    eligible=_qkv_eligible,
+    plan=_qkv_plan,
+    plan_lower=_qkv_plan_lower,
+))
+
+
 def _gemm_batched_cost(a, b, *, out_dtype=None):
     if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
         raise ValueError(f"gemm_batched: bad shapes {a.shape} @ {b.shape}")
@@ -569,6 +712,270 @@ register(OffloadOp(
 ))
 
 
+# ---------------------------------------------------------------------------
+# moe_expert_ffn — the whole grouped expert FFN (gate/up/silu/down) behind
+# one descriptor.  The MoE layer used to issue three separate expert GEMM
+# dispatches (and the explicit-collective path three bare engine().launch
+# accounting calls); now the cost model sees the whole expert block at once
+# and the expert-parallel shard_map — experts model-sharded, every GEMM
+# chip-local, zero collectives — is its `plan`.
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_dims(x, wg, wu, wd):
+    if x.ndim < 3 or wg.ndim != 3 or wu.ndim != 3 or wd.ndim != 3:
+        raise ValueError(
+            f"moe_expert_ffn: bad ranks {x.shape} {wg.shape} {wu.shape} {wd.shape}"
+        )
+    e, d = x.shape[0], x.shape[-1]
+    f = wg.shape[2]
+    if wg.shape[:2] != (e, d) or wu.shape != wg.shape:
+        raise ValueError(f"moe_expert_ffn: bad gate/up {wg.shape} {wu.shape}")
+    if tuple(wd.shape) != (e, f, d):
+        raise ValueError(f"moe_expert_ffn: bad down {wd.shape}, want {(e, f, d)}")
+    m = 1
+    for dim in x.shape[1:-1]:
+        m *= dim
+    return e, m, d, f
+
+
+def _moe_ffn_cost(x, wg, wu, wd):
+    e, m, d, f = _moe_ffn_dims(x, wg, wu, wd)
+    return cm.gemm_cost(
+        m, 3 * f, d, jnp.dtype(x.dtype).itemsize, batch=e, op="moe_expert_ffn"
+    )
+
+
+def _moe_ffn_eligible(x, wg, wu, wd):
+    e, m, d, f = _moe_ffn_dims(x, wg, wu, wd)
+    return _pallas_gemm_eligible(m, f, d, x.dtype)
+
+
+def _moe_ffn_local(x, wg, wu, wd):
+    """The expert FFN math itself (fp32 accumulation) — shared by the host
+    lowering and the plan's shard_map body."""
+    dn = (((x.ndim - 1,), (1,)), ((0,), (0,)))
+    g = _accum_dot(x, wg, dn, x.dtype)
+    u = _accum_dot(x, wu, dn, x.dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return _accum_dot(h, wd, dn, x.dtype)
+
+
+def _moe_ffn_host(x, wg, wu, wd):
+    return _moe_ffn_local(x, wg, wu, wd)
+
+
+def _moe_ffn_pallas(x, wg, wu, wd, *, interpret=False):
+    e, m, d, f = _moe_ffn_dims(x, wg, wu, wd)
+    mm = _kops().pallas_lowering("moe_expert_ffn")
+    xe = x.reshape(e, m, d)
+    g = mm(xe, wg, out_dtype=x.dtype, interpret=interpret)
+    u = mm(xe, wu, out_dtype=x.dtype, interpret=interpret)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = mm(h, wd, out_dtype=x.dtype, interpret=interpret)
+    return y.reshape(*x.shape[:-1], d)
+
+
+def _moe_ffn_plan(x, wg, wu, wd):
+    """Expert-parallel applicability: experts shard over the model axis and
+    every GEMM stays chip-local (zero collectives inside the plan).  The
+    first free dim additionally shards over the data axes when it divides
+    (the grouped/EP dispatch layouts both arrange for this)."""
+    info = _tp_mesh_info()
+    if info is None:
+        return None
+    mesh, n_model, dp, n_dp = info
+    if x.shape[0] % n_model:
+        return None
+    shard_free = bool(dp) and x.ndim >= 3 and x.shape[1] % n_dp == 0
+    return mesh, (dp if shard_free else ())
+
+
+def _moe_ffn_plan_lower(plan, x, wg, wu, wd):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    mesh, dp = plan
+    free = (dp if dp else None,) + (None,) * (x.ndim - 2)
+    spec_x = P("model", *free)
+    spec_w = P("model", None, None)
+    fn = shard_map(
+        _moe_ffn_local,
+        mesh=mesh,
+        in_specs=(spec_x, spec_w, spec_w, spec_w),
+        out_specs=spec_x,
+        check_vma=False,
+    )
+    return fn(x, wg, wu, wd)
+
+
+register(OffloadOp(
+    name="moe_expert_ffn",
+    cost=_moe_ffn_cost,
+    host=_moe_ffn_host,
+    pallas=_moe_ffn_pallas,
+    eligible=_moe_ffn_eligible,
+    plan=_moe_ffn_plan,
+    plan_lower=_moe_ffn_plan_lower,
+))
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan — the whole Mamba-2 SSD core (chunked quadratic term + inter-chunk
+# state recurrence + D skip) behind one descriptor.  The SSM layer used to
+# run this inside a hand-rolled whole-block shard_map with bare
+# engine().launch accounting; now the per-head shard_map — SSM heads
+# model-sharded, all math chip-local, zero collectives — is its `plan` and
+# the ``ssd_chunk_diag`` Pallas kernel its device form.
+# ---------------------------------------------------------------------------
+
+def _ssd_dims(xh, dt, a, bh, ch, d_skip, *, chunk):
+    if xh.ndim != 4:
+        raise ValueError(f"ssd_scan: x must be (B, S, H, P), got {xh.shape}")
+    bsz, s, h, pdim = xh.shape
+    n = bh.shape[-1]
+    if dt.shape != (bsz, s, h):
+        raise ValueError(f"ssd_scan: dt {dt.shape} != {(bsz, s, h)}")
+    if a.shape != (h,) or d_skip.shape != (h,):
+        raise ValueError(f"ssd_scan: a/d_skip must be ({h},)")
+    if bh.shape != (bsz, s, h, n) or ch.shape != (bsz, s, h, n):
+        raise ValueError(f"ssd_scan: bad B/C {bh.shape} {ch.shape}")
+    q = min(int(chunk), s)
+    if s % q:
+        raise ValueError(f"ssd_scan: seq {s} not divisible by chunk {q}")
+    return bsz, s, h, pdim, n, q
+
+
+def _ssd_cost(xh, dt, a, bh, ch, d_skip, *, chunk):
+    bsz, s, h, pdim, n, q = _ssd_dims(xh, dt, a, bh, ch, d_skip, chunk=chunk)
+    return cm.gemm_cost(
+        bsz * s, 2 * n + pdim, q, jnp.dtype(xh.dtype).itemsize, batch=h,
+        op="ssd_scan",
+    )
+
+
+def _ssd_eligible(xh, dt, a, bh, ch, d_skip, *, chunk):
+    bsz, s, h, pdim, n, q = _ssd_dims(xh, dt, a, bh, ch, d_skip, chunk=chunk)
+    return min(pdim, n, q) >= 8 and xh.dtype in (jnp.float32, jnp.bfloat16)
+
+
+def _ssd_scan_math(xh, dt, a, bh, ch, d_skip, chunk, diag_fn):
+    """Chunked SSD core: (B, S, H, P) -> (B, S, H, P) fp32.  ``diag_fn``
+    computes the within-chunk quadratic term (jnp oracle or Pallas kernel);
+    the (N, P)-state inter-chunk recurrence stays a ``lax.scan``.  All math
+    is per-head — under the plan's shard_map each device runs this on its
+    local heads with zero collectives."""
+    bsz, s, h, pdim = xh.shape
+    n = bh.shape[-1]
+    q = min(int(chunk), s)
+    nc = s // q
+    da = dt * a                                               # (B, S, H)
+    xdt = xh * dt[..., None]
+
+    def to_bh(t):
+        t = t.reshape(bsz, nc, q, h, -1).transpose(0, 3, 1, 2, 4)
+        return t.reshape(bsz * h, nc, q, t.shape[-1])
+
+    da_c = da.reshape(bsz, nc, q, h)
+    cum_c = jnp.cumsum(da_c, axis=2)                          # (B, C, Q, H)
+    cum_bh = cum_c.transpose(0, 3, 1, 2).reshape(bsz * h, nc, q)
+
+    x_bh = to_bh(xdt).astype(jnp.float32)
+    b_bh = to_bh(bh).astype(jnp.float32)
+    c_bh = to_bh(ch).astype(jnp.float32)
+
+    y_diag = diag_fn(x_bh, cum_bh, b_bh, c_bh)
+
+    decay_to_end = jnp.exp(cum_bh[:, :, -1:] - cum_bh)
+    states = jnp.einsum("zcq,zcqn,zcqp->zcnp", decay_to_end, b_bh, x_bh)
+    chunk_decay = jnp.exp(cum_bh[:, :, -1])
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        prev = carry
+        return dec[:, None, None] * prev + st, prev
+
+    init = jnp.zeros((bsz * h, n, pdim), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init, (states.transpose(1, 0, 2, 3), chunk_decay.T)
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3)
+
+    y_off = jnp.einsum(
+        "zcqn,zcnp,zcq->zcqp", c_bh, prev_states, jnp.exp(cum_bh)
+    )
+    y = (y_diag.astype(jnp.float32) + y_off)
+    y = y.reshape(bsz, h, s, pdim).transpose(0, 2, 1, 3)
+    return y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+
+
+def _ssd_host(xh, dt, a, bh, ch, d_skip, *, chunk):
+    from repro.kernels import ref as kref  # lazy: avoid import cycle
+
+    return _ssd_scan_math(xh, dt, a, bh, ch, d_skip, chunk,
+                          kref.ssd_chunk_diag_ref)
+
+
+def _ssd_pallas(xh, dt, a, bh, ch, d_skip, *, chunk, interpret=False):
+    kernel = _kops().pallas_lowering("ssd_scan")
+
+    def diag(x_bh, cum_bh, b_bh, c_bh):
+        return kernel(x_bh, cum_bh, b_bh, c_bh, interpret=interpret)
+
+    return _ssd_scan_math(xh, dt, a, bh, ch, d_skip, chunk, diag)
+
+
+def _ssd_plan(xh, dt, a, bh, ch, d_skip, *, chunk):
+    """Head-sharded TP applicability: every piece of the SSD math is
+    per-head and therefore chip-local under a model-sharded head axis."""
+    info = _tp_mesh_info()
+    if info is None or xh.ndim != 4:
+        return None
+    mesh, n_model, dp, n_dp = info
+    bsz, s, h, _ = xh.shape
+    if h % n_model or bsz % n_dp or s % min(int(chunk), s):
+        return None
+    return mesh, dp
+
+
+def _ssd_plan_lower(plan, xh, dt, a, bh, ch, d_skip, *, chunk):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    mesh, dp = plan
+
+    def local(xl, dtl, al, bl, cl, dl):
+        from repro.kernels import ref as kref
+
+        return _ssd_scan_math(xl, dtl, al, bl, cl, dl, chunk,
+                              kref.ssd_chunk_diag_ref)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, "model", None), P(dp, None, "model"), P("model"),
+            P(dp, None, "model", None), P(dp, None, "model", None),
+            P("model"),
+        ),
+        out_specs=P(dp, None, "model", None),
+        check_vma=False,
+    )
+    return fn(xh, dt, a, bh, ch, d_skip)
+
+
+register(OffloadOp(
+    name="ssd_scan",
+    cost=_ssd_cost,
+    host=_ssd_host,
+    pallas=_ssd_pallas,
+    eligible=_ssd_eligible,
+    plan=_ssd_plan,
+    plan_lower=_ssd_plan_lower,
+))
+
+
 def _syrk_cost(a, *, out_dtype=None):
     if a.ndim != 2:
         raise ValueError(f"syrk takes a 2-D operand, got {a.shape}")
@@ -651,6 +1058,53 @@ register(OffloadOp(
 
 
 # ---------------------------------------------------------------------------
+# decode_attention — one-token attention against a (possibly rolling) KV
+# cache with a [lo, hi) valid-slot range.  The decode layer used a bare
+# engine().launch + hand-routed backend branch; as a descriptor the masked
+# math is the host lowering and the flash-decode kernel (one HBM pass over
+# the cache) the Pallas lowering.
+# ---------------------------------------------------------------------------
+
+def _decode_attn_cost(q, k, v, lo, hi):
+    if q.ndim != 4 or q.shape[2] != 1:
+        raise ValueError(f"decode_attention: q must be (B, Hq, 1, D), got {q.shape}")
+    b, hq, _, d = q.shape
+    if k.ndim != 4 or v.shape != k.shape or k.shape[0] != b or k.shape[3] != d:
+        raise ValueError(f"decode_attention: bad cache {k.shape} / {v.shape}")
+    skv = k.shape[2]
+    return cm.attention_cost(b, 1, skv, hq, d, jnp.dtype(q.dtype).itemsize)
+
+
+def _decode_attn_eligible(q, k, v, lo, hi):
+    return q.shape[-1] >= 8 and q.dtype in (jnp.float32, jnp.bfloat16)
+
+
+def _decode_attn_host(q, k, v, lo, hi):
+    slots = jnp.arange(k.shape[2], dtype=jnp.int32)
+    kv_valid = jnp.logical_and(slots >= lo, slots < hi)
+    return attention_math(q, k, v, causal=False, kv_mask=kv_valid)
+
+
+def _decode_attn_pallas(q, k, v, lo, hi, *, interpret=False):
+    b = q.shape[0]
+    lo_b = jnp.broadcast_to(lo, (b,)).astype(jnp.int32)
+    hi_b = jnp.broadcast_to(hi, (b,)).astype(jnp.int32)
+    out = _kops().pallas_lowering("decode_attention")(
+        q[:, :, 0, :], k, v, lo_b, hi_b, interpret=interpret
+    )
+    return out[:, :, None, :]
+
+
+register(OffloadOp(
+    name="decode_attention",
+    cost=_decode_attn_cost,
+    host=_decode_attn_host,
+    pallas=_decode_attn_pallas,
+    eligible=_decode_attn_eligible,
+))
+
+
+# ---------------------------------------------------------------------------
 # Level-2 / Level-1 descriptors (host lowering only; still scored + routed,
 # so traces show whether the decision model would offload them)
 # ---------------------------------------------------------------------------
@@ -716,6 +1170,67 @@ def _nrm2_host(x):
 
 
 register(OffloadOp(name="nrm2", cost=_nrm2_cost, host=_nrm2_host))
+
+
+# ---------------------------------------------------------------------------
+# Light reductions / elementwise ops — host-only descriptors so the auto
+# policy can score them and the trace sees them (they never pay to offload
+# alone; the graph frontend fuses them into producer launches instead).
+# ---------------------------------------------------------------------------
+
+def _light_cost(op_name, flops_per_elem=2.0):
+    def cost(x, *rest, **kwargs):
+        return cm.vector_cost(
+            op_name, x.size, jnp.dtype(x.dtype).itemsize, flops_per_elem
+        )
+
+    return cost
+
+
+def _sum_host(x, *, axis=None, keepdims=False):
+    return jnp.sum(x, axis=axis, keepdims=keepdims)
+
+
+def _mean_host(x, *, axis=None, keepdims=False):
+    return jnp.mean(x, axis=axis, keepdims=keepdims)
+
+
+def _relu_host(x):
+    return jax.nn.relu(x)
+
+
+def _silu_host(x):
+    return jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rmsnorm_cost(x, scale, *, eps=1e-6):
+    if x.shape[-1] != scale.shape[-1]:
+        raise ValueError(
+            f"rmsnorm_scale: scale {scale.shape} does not match {x.shape}"
+        )
+    return cm.vector_cost(
+        "rmsnorm_scale", x.size, jnp.dtype(x.dtype).itemsize, 4.0
+    )
+
+
+def _rmsnorm_host(x, scale, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+register(OffloadOp(name="sum", cost=_light_cost("sum", 1.0), host=_sum_host,
+                   host_only=True, note="light reduction (host-only)"))
+register(OffloadOp(name="mean", cost=_light_cost("mean", 1.0), host=_mean_host,
+                   host_only=True, note="light reduction (host-only)"))
+register(OffloadOp(name="relu", cost=_light_cost("relu", 1.0), host=_relu_host,
+                   host_only=True, note="light elementwise (host-only)"))
+register(OffloadOp(name="silu", cost=_light_cost("silu", 4.0), host=_silu_host,
+                   host_only=True, note="light elementwise (host-only)"))
+register(OffloadOp(name="rmsnorm_scale", cost=_rmsnorm_cost,
+                   host=_rmsnorm_host, host_only=True,
+                   note="norm epilogue (host-only)"))
 
 
 # ---------------------------------------------------------------------------
@@ -805,6 +1320,93 @@ def mlp_block(
     return dispatch(
         "mlp_block", x, w_up, w_down, gate, b_up, b_down, kind=kind,
         handle=handle,
+    )
+
+
+def qkv_project(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    *,
+    bq: Optional[jax.Array] = None,
+    bk: Optional[jax.Array] = None,
+    bv: Optional[jax.Array] = None,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
+    """Fused q/k/v input projection through the offload seam.
+
+    Returns the concatenated ``(..., (Hq + 2·Hkv)·hd)`` projection; callers
+    split and reshape into heads.  One dispatch for all three projections:
+    the cost model sees the whole input-projection workload, the
+    sequence-sharded TP shard_map is resolved as a plan *before* the record
+    is written, and the Pallas path runs one hand-tiled MXU GEMM over the
+    concatenated weights.  Replaces the attention layer's raw
+    ``lax.dot_general``-inside-``shard_map`` launch sites."""
+    return dispatch(
+        "qkv_project", x, wq, wk, wv, bq=bq, bk=bk, bv=bv, handle=handle
+    )
+
+
+def ssd_scan(
+    xh: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    bh: jax.Array,
+    ch: jax.Array,
+    d_skip: jax.Array,
+    *,
+    chunk: int,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
+    """Whole Mamba-2 SSD core through the offload seam.
+
+    xh: (B, S, H, P); dt: (B, S, H) fp32; a, d_skip: (H,); bh, ch:
+    (B, S, H, N).  Returns the fp32 (B, S, H, P) mixer output (within-chunk
+    quadratic term + inter-chunk state recurrence + D skip).  The head-
+    sharded TP shard_map is its plan (zero collectives — all SSD math is
+    per-head); the ``ssd_chunk_diag`` Pallas kernel its device form."""
+    return dispatch(
+        "ssd_scan", xh, dt, a, bh, ch, d_skip, chunk=chunk, handle=handle
+    )
+
+
+def moe_expert_ffn(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    *,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
+    """Whole grouped expert FFN (E, ..., d) -> (E, ..., d) through the seam.
+
+    One dispatch for gate/up/silu/down across all experts; the expert-
+    parallel shard_map (experts model-sharded, zero collectives) is its
+    plan, the grouped MXU GEMM kernel its Pallas lowering.  Keeps all free
+    dims intact — merging a sharded dim in a reshape forces GSPMD to
+    all-gather, so MoE layouts stay (E, G, C, d) through the block."""
+    return dispatch("moe_expert_ffn", x, wg, wu, wd, handle=handle)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    handle: Optional[DeviceHandle] = None,
+) -> jax.Array:
+    """One-token decode attention against a KV cache through the seam.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S_cache, D); ``lo``/``hi`` bound the
+    valid cache slots (rolling SWA buffers wrap).  Host form is the
+    shardable masked math; the Pallas form streams the cache once
+    (``flash_decode``).  ``handle`` pins the call to the device-resident
+    cache so affinity scheduling routes decode to the data."""
+    return dispatch(
+        "decode_attention", q, k_cache, v_cache, lo, hi, handle=handle
     )
 
 
@@ -965,3 +1567,27 @@ def scal(alpha, x: jax.Array) -> jax.Array:
 
 def nrm2(x: jax.Array) -> jax.Array:
     return dispatch("nrm2", x)
+
+
+def reduce_sum(x: jax.Array, *, axis=None, keepdims: bool = False) -> jax.Array:
+    """Scored + traced sum reduction (host-only descriptor)."""
+    return dispatch("sum", x, axis=axis, keepdims=keepdims)
+
+
+def reduce_mean(x: jax.Array, *, axis=None, keepdims: bool = False) -> jax.Array:
+    """Scored + traced mean reduction (host-only descriptor)."""
+    return dispatch("mean", x, axis=axis, keepdims=keepdims)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return dispatch("relu", x)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return dispatch("silu", x)
+
+
+def rmsnorm_scale(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm (fp32 internals) through the seam — the norm epilogue every
+    block pays, visible to the trace and scoreable by the auto policy."""
+    return dispatch("rmsnorm_scale", x, scale, eps=eps)

@@ -187,6 +187,12 @@ def dispatch_placed(
     op = get_op(name)
     cost = op.cost(*args, **kwargs)
     arrays = [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]
+    # Array-valued keyword operands (fused biases, masks) are part of the
+    # call's static signature too — key the ledger on them, in name order.
+    arrays += [
+        v for _, v in sorted(kwargs.items())
+        if hasattr(v, "shape") and hasattr(v, "dtype")
+    ]
     plan = None
     if op.plan is not None:
         plan = op.plan(*args, **kwargs)

@@ -316,13 +316,70 @@ class HeroCluster:
     def num_devices(self) -> int:
         return len(self.devices)
 
-    def resize(self, num_devices: int) -> None:
+    def _rebuild(self, num_devices: int) -> None:
+        """Tear down and rebuild the topology (scoped ``offload_policy``
+        entry): every device starts cold and the handle ledger clears."""
         if num_devices < 1:
             raise ValueError(f"cluster needs >= 1 device, got {num_devices}")
         self.devices = [
             VirtualDevice(i, self.platform) for i in range(num_devices)
         ]
         self._handles.clear()       # fresh devices hold nothing yet
+
+    def resize(self, num_devices: int) -> List[Tuple[str, int]]:
+        """Elastically grow/shrink the cluster (checkpoint-boundary replan).
+
+        Grow appends cold devices; existing devices keep their queues,
+        residency and pinned handles.  Shrink drains the removed devices
+        first: their in-flight launches reschedule onto the keepers through
+        the active scheduler, and every pinned handle homed on a removed
+        device is re-staged onto a keeper (full host->device copy, recorded
+        on the new lane — the same path the :class:`ClusterSupervisor`
+        takes on device loss).  Returns ``[(handle name, new device), ...]``
+        for the re-staged handles (empty on grow).
+        """
+        if num_devices < 1:
+            raise ValueError(f"cluster needs >= 1 device, got {num_devices}")
+        cur = len(self.devices)
+        if num_devices == cur:
+            return []
+        if not self.devices:        # first build (from __init__)
+            self._rebuild(num_devices)
+            return []
+        if num_devices > cur:
+            self.devices = self.devices + [
+                VirtualDevice(i, self.platform)
+                for i in range(cur, num_devices)
+            ]
+            return []
+        if not any(d.alive for d in self.devices[:num_devices]):
+            raise RuntimeError(
+                "cannot shrink: no alive device among the keepers"
+            )
+        # Drain removed lanes: mark failed (evicts residency, surrenders
+        # queues), truncate, then restage handles / reschedule orphans onto
+        # the survivors via the active scheduler.
+        orphans: List[LaunchTicket] = []
+        for d in self.devices[num_devices:]:
+            orphans.extend(d.fail())
+        lost = [
+            h for h in self._handles.values() if h.device_id >= num_devices
+        ]
+        self.devices = self.devices[:num_devices]
+        moves: List[Tuple[str, int]] = []
+        for h in lost:
+            h.device_id = HOST_DEVICE_ID   # bytes live only in host DRAM now
+            self.restage_handle(h)
+            moves.append((h.name, h.device_id))
+        for t in orphans:
+            cost = OpCost(
+                op=t.op, flops=0.0, staged_bytes=0.0, touched_bytes=0.0
+            )
+            target = self._pick(cost, t.shape_key)
+            if not target.booted:
+                target.boot()
+            target.enqueue(t)
+        return moves
 
     def set_scheduler(self, name: str) -> None:
         if name not in SCHEDULERS:
@@ -830,7 +887,7 @@ class offload_policy:
         if self._platform is not None:
             eng.set_platform(self._platform)
         if self._num_devices is not None:
-            eng.resize(self._num_devices)
+            eng._rebuild(self._num_devices)  # scoped topology: fresh devices
         if self._scheduler is not None:
             eng.set_scheduler(self._scheduler)
         return eng

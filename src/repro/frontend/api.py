@@ -40,6 +40,7 @@ from repro.frontend.schedule import (
     NodeReport,
     current_region,
     evaluate,
+    evaluate_many,
     offload_region,
 )
 
@@ -54,6 +55,7 @@ __all__ = [
     "asarray",
     "asnumpy",
     "block",
+    "block_all",
     "current_region",
     "divide",
     "exp",
@@ -118,6 +120,18 @@ def block(x: LazyArray) -> LazyArray:
     if isinstance(x, LazyArray):
         return x.block()
     return x
+
+
+def block_all(*arrays):
+    """Force several lazy arrays in ONE scheduling pass (returns them).
+
+    Independent expressions surface in the same topological waves, so
+    same-shape GEMMs *across* the forced roots batch into a single
+    ``gemm_batched`` launch and CSE-shared subgraphs run once — this is how
+    the graph model forward forces a block's independent projections
+    together (``models/forward.py``)."""
+    evaluate_many([a.node for a in arrays if isinstance(a, LazyArray)])
+    return arrays
 
 
 # ---------------------------------------------------------------------------

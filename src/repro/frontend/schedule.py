@@ -42,6 +42,7 @@ __all__ = [
     "NodeReport",
     "current_region",
     "evaluate",
+    "evaluate_many",
     "offload_region",
 ]
 
@@ -77,6 +78,9 @@ class GraphReport:
 
     name: str
     launches: List[NodeReport] = dataclasses.field(default_factory=list)
+    # Nodes removed before scheduling: duplicate subtrees collapsed by
+    # common-subexpression elimination plus the dead nodes only they fed.
+    nodes_eliminated: int = 0
 
     @property
     def staged_in_bytes(self) -> float:
@@ -103,6 +107,7 @@ class GraphReport:
             f"graph {self.name!r}: {len(self.launches)} launches, "
             f"{self.fused_ops} fused elementwise ops, "
             f"{self.batched_launches} batched GEMMs, "
+            f"{self.nodes_eliminated} nodes CSE/DCE-eliminated, "
             f"staged_in={self.staged_in_bytes:.0f}B "
             f"readback={self.readback_bytes:.0f}B"
         )
@@ -295,11 +300,11 @@ def _apply_chain(head_value, chain: List[Node], prev: Node):
 # The scheduler
 # ---------------------------------------------------------------------------
 
-def _collect(root: Node) -> List[Node]:
-    """Postorder over the unevaluated subgraph reachable from ``root``."""
+def _collect(roots: Sequence[Node]) -> List[Node]:
+    """Postorder over the unevaluated subgraph reachable from ``roots``."""
     order: List[Node] = []
     seen = set()
-    stack: List[Tuple[Node, bool]] = [(root, False)]
+    stack: List[Tuple[Node, bool]] = [(r, False) for r in reversed(roots)]
     while stack:
         node, expanded = stack.pop()
         if node.id in seen:
@@ -316,6 +321,79 @@ def _collect(root: Node) -> List[Node]:
             if not inp.evaluated and inp.id not in seen:
                 stack.append((inp, False))
     return order
+
+
+def _freeze(v):
+    """Hashable view of a node-attrs value (best effort: repr fallback)."""
+    if isinstance(v, (tuple, list)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    try:
+        hash(v)
+        return v
+    except TypeError:
+        return repr(v)
+
+
+def _eliminate(
+    order: List[Node], roots: Sequence[Node]
+) -> Tuple[List[Node], List[Tuple[Node, Node]], int]:
+    """Common-subexpression + dead-node elimination before scheduling.
+
+    Structurally identical nodes — same op, same (representative) inputs,
+    same static params — collapse onto their first occurrence; consumers
+    are rewired to the representative.  Nodes made unreachable from the
+    forced roots by the collapse (the duplicate subtrees) are dropped from
+    the schedule entirely.  Returns ``(live_order, aliases, eliminated)``;
+    each alias ``(dup, rep)`` has its value copied from ``rep`` after the
+    schedule runs, so outside references to the duplicate stay valid.
+    Leaves are identity-keyed (two equal-shaped arrays are not assumed
+    equal); evaluated nodes are already values and never collapse.
+    """
+    rep: Dict[int, Node] = {}
+    by_val: Dict[int, Node] = {}   # evaluated-node unification by buffer id
+    seen: Dict[Any, Node] = {}
+    aliases: List[Tuple[Node, Node]] = []
+
+    def rep_of(i: Node) -> Node:
+        r = rep.get(i.id)
+        if r is not None:
+            return r
+        if i.evaluated:
+            # Leaves (and pre-forced nodes) unify on the underlying buffer:
+            # the same array lifted twice is the same graph input.
+            return by_val.setdefault(id(i.value), i)
+        return i
+
+    for n in order:
+        key = (
+            n.op,
+            tuple(rep_of(i).id for i in n.inputs),
+            _freeze(n.attrs),
+        )
+        r = seen.get(key)
+        if r is None:
+            seen[key] = n
+            rep[n.id] = n
+        else:
+            rep[n.id] = r
+            aliases.append((n, r))
+    if not aliases:
+        return order, [], 0
+    for n in order:
+        n.inputs = tuple(rep_of(i) for i in n.inputs)
+    # Dead-node elimination: only what the rewired roots still reach runs.
+    live: set = set()
+    stack = [rep.get(r.id, r) for r in roots]
+    while stack:
+        n = stack.pop()
+        if n.id in live or n.evaluated:
+            continue
+        live.add(n.id)
+        stack.extend(n.inputs)
+    kept = [n for n in order if n.id in live]
+    return kept, aliases, len(order) - len(kept)
 
 
 def _array_inputs(node: Node) -> List[Node]:
@@ -510,28 +588,40 @@ def evaluate(root: Node):
     residency and handle lifetimes with sibling evaluations), else under an
     ephemeral region whose intermediate handles are released on return.
     """
-    if root.evaluated:
-        return root.value
+    return evaluate_many([root])[0]
 
-    from repro.core import accounting
 
-    region = current_region()
-    ephemeral = region is None
-    if ephemeral:
-        region = GraphRegion()
-    try:
-        with accounting.graph_region(region.name):
-            _schedule(root, region)
-    finally:
+def evaluate_many(roots: Sequence[Node]):
+    """Force several graph roots in ONE scheduling pass.
+
+    Independent roots surface in the same topological waves, so same-shape
+    GEMMs *across* roots batch into one ``gemm_batched`` launch and shared
+    subgraphs (post-CSE) run once — the multi-output form of
+    :func:`evaluate` (``hnp.block_all``).
+    """
+    pending = [r for r in roots if not r.evaluated]
+    if pending:
+        from repro.core import accounting
+
+        region = current_region()
+        ephemeral = region is None
         if ephemeral:
-            region.release()
-    return root.value
+            region = GraphRegion()
+        try:
+            with accounting.graph_region(region.name):
+                _schedule(pending, region)
+        finally:
+            if ephemeral:
+                region.release()
+    return [r.value for r in roots]
 
 
-def _schedule(root: Node, region: GraphRegion) -> None:
-    order = _collect(root)
+def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
+    order = _collect(roots)
     if not order:
         return
+    order, aliases, eliminated = _eliminate(order, roots)
+    region.report.nodes_eliminated += eliminated
     in_graph = {n.id for n in order}
     consumers: Dict[int, List[Node]] = {}
     deps: Dict[int, int] = {}
@@ -543,7 +633,8 @@ def _schedule(root: Node, region: GraphRegion) -> None:
                 cnt += 1
         deps[n.id] = cnt
     chains, fused_into = _fusion_chains(order, consumers)
-    roots = {root.id}
+    alias_of = {d.id: r for d, r in aliases}
+    root_ids = {alias_of.get(r.id, r).id for r in roots}
 
     by_id = {n.id: n for n in order}
     ready = sorted(
@@ -584,15 +675,20 @@ def _schedule(root: Node, region: GraphRegion) -> None:
             if len(members) < 2:
                 singles.extend(members)
         for n in sorted(singles, key=lambda n: n.id):
-            _run_heavy(n, chains, roots, region)
+            _run_heavy(n, chains, root_ids, region)
             complete(n, ready)
         for key, members in groups.items():
             if len(members) >= 2:
                 members = sorted(members, key=lambda n: n.id)
-                _run_batched(members, chains, roots, region)
+                _run_batched(members, chains, root_ids, region)
                 for n in members:
                     complete(n, ready)
 
     leftover = [n for n in order if n.id not in done and not n.evaluated]
     if leftover:  # cycles cannot happen by construction; guard anyway
         raise RuntimeError(f"scheduler failed to evaluate nodes: {leftover}")
+    # CSE aliases: outside references to a collapsed duplicate stay valid —
+    # it carries its representative's value without ever launching.
+    for dup, rep in aliases:
+        if not dup.evaluated and rep.evaluated:
+            dup.set_value(rep.value)

@@ -148,6 +148,13 @@ PALLAS_LOWERINGS = {
     "attention": flash_attention,
     "decode_attention": flash_decode,
     "ssd_chunk_diag": ssd_chunk_diag,
+    # Composite model-zoo descriptors: each fetches its core kernel here by
+    # its own name, keeping the op registry and this table in one-to-one
+    # view (the glue — bias adds, silu, the inter-chunk scan — lives in the
+    # descriptor's pallas adapter in repro.core.blas).
+    "qkv_project": gemm,             # concatenated-weight projection GEMM
+    "ssd_scan": ssd_chunk_diag,      # within-chunk quadratic term
+    "moe_expert_ffn": moe_gemm,      # gate/up/down grouped expert GEMMs
 }
 
 

@@ -196,6 +196,7 @@ def serve_cluster(
     temperature: float = 0.0,
     seed: int = 0,
     pin_caches: bool = True,
+    forward_mode: Optional[str] = None,
 ) -> ClusterServeResult:
     """Serve concurrent request batches across the HeroCluster's devices.
 
@@ -226,6 +227,12 @@ def serve_cluster(
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
+    if forward_mode is not None:
+        # "graph": the decode steps run the graph-captured forward — each
+        # block's dense FFN is lowered as an hnp expression graph (residual
+        # fused into the FFN launch, per-launch residency threaded), through
+        # the exact same registered descriptors as the eager path.
+        cfg = dataclasses.replace(cfg, forward_mode=forward_mode)
     cluster = engine()
     # one set of weights serves every batch (and one jit cache warms up)
     model = build_model(cfg)

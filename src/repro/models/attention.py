@@ -1,152 +1,26 @@
-"""GQA attention block: QKV projections (BLAS seam) + RoPE/M-RoPE + KV cache."""
+"""GQA attention block: QKV projections (BLAS seam) + RoPE/M-RoPE + KV cache.
+
+Every contraction and the attention math itself dispatch through registered
+``OffloadOp`` descriptors — ``qkv_project`` (fused 3-way input projection,
+sequence-sharded TP shard_map as its plan), ``attention``, ``decode_attention``
+and ``matmul`` (``tp_mode="row"`` gives the output projection its single
+bf16-psum tensor-parallel form).  This file contains zero raw
+``lax.dot_general`` launch sites and zero bare ``engine().launch`` accounting
+calls: placement, cost and residency are stamped on every record by the one
+dispatch path in ``repro.core.dispatch`` (guard-tested).
+"""
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import blas
-from repro.core import cost_model as cm
-from repro.core.hero import engine
 from repro.models import layers as L
-from repro.sharding.annotate import _ambient_mesh
-
-from repro.compat import shard_map
 
 __all__ = ["init_attention", "attention_block", "decode_attention_block"]
-
-
-def _attention_block_tp(p, x, cfg, positions, window, rope_theta, mesh):
-    """Whole attention block under one shard_map (§Perf hillclimb #2).
-
-    Q heads are model-sharded (wq/wo column/row slices); kv projections are
-    replicated (kv heads < model-axis size on every assigned GQA arch, and
-    they are tiny).  The ONLY cross-device traffic is one bf16 psum of the
-    block output in forward and one bf16 psum of dX in backward — GSPMD's
-    schedule all-reduced the fp32 dot products (2x wire) and added per-
-    projection reductions.  Returns None when topology/shapes don't apply.
-    """
-    from jax.sharding import PartitionSpec as P
-
-    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    if x.ndim != 3 or "model" not in getattr(mesh, "axis_names", ()):
-        return None
-    n_model = mesh.shape["model"]
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
-    if hq % n_model or x.shape[0] % n_dp or n_model <= 1:
-        return None
-    hq_loc = hq // n_model
-
-    bq = p.get("bq", jnp.zeros((hq * hd,), x.dtype))
-    bk = p.get("bk", jnp.zeros((hkv * hd,), x.dtype))
-    bv = p.get("bv", jnp.zeros((hkv * hd,), x.dtype))
-    window_arr = jnp.asarray(
-        (1 << 30) if window is None else window, jnp.int32
-    )
-    theta_arr = jnp.asarray(rope_theta, jnp.float32)
-    # Fully-manual shard_map (all mesh axes). A partial-manual variant
-    # (axis_names={"model"}) would let the dW data-reductions sink out of
-    # the microbatch loop, but it trips an XLA:CPU AllReducePromotion
-    # crash at production sizes ("Invalid binary instruction opcode copy");
-    # on TPU the while-loop all-reduce code-motion pass performs the same
-    # hoist on this form. Documented in EXPERIMENTS §Perf.
-    pos_spec = P(dp, None) if positions.ndim == 2 else P(None, dp, None)
-
-    def local(xl, pos_l, win, th, wq, bq_, wk, bk_, wv, bv_, wo):
-        b, s, _ = xl.shape
-        idx = jax.lax.axis_index("model")
-        q = (jax.lax.dot_general(xl, wq, (((2,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-             .astype(xl.dtype) + bq_).reshape(b, s, hq_loc, hd)
-        # kv projections can't shard over heads (hkv < model axis): shard
-        # them over the SEQUENCE instead and all-gather the small kv
-        # activations — computing them replicated costs +16x kv-proj FLOPs
-        # (measured +28% whole-step dot-FLOPs on qwen2 before this).
-        if s % n_model == 0:
-            seg = s // n_model
-            xs = jax.lax.dynamic_slice_in_dim(xl, idx * seg, seg, axis=1)
-            k_p = (jax.lax.dot_general(xs, wk, (((2,), (0,)), ((), ())),
-                                       preferred_element_type=jnp.float32)
-                   .astype(xl.dtype) + bk_)
-            v_p = (jax.lax.dot_general(xs, wv, (((2,), (0,)), ((), ())),
-                                       preferred_element_type=jnp.float32)
-                   .astype(xl.dtype) + bv_)
-            k = jax.lax.all_gather(k_p, "model", axis=1, tiled=True)
-            v = jax.lax.all_gather(v_p, "model", axis=1, tiled=True)
-            k = k.reshape(b, s, hkv, hd)
-            v = v.reshape(b, s, hkv, hd)
-        else:
-            k = (jax.lax.dot_general(xl, wk, (((2,), (0,)), ((), ())),
-                                     preferred_element_type=jnp.float32)
-                 .astype(xl.dtype) + bk_).reshape(b, s, hkv, hd)
-            v = (jax.lax.dot_general(xl, wv, (((2,), (0,)), ((), ())),
-                                     preferred_element_type=jnp.float32)
-                 .astype(xl.dtype) + bv_).reshape(b, s, hkv, hd)
-        if cfg.mrope:
-            q = L.mrope(q, pos_l, th)
-            k = L.mrope(k, pos_l, th)
-        else:
-            pos2d = pos_l if pos_l.ndim == 2 else pos_l[0]
-            q = L.rope(q, pos2d, th)
-            k = L.rope(k, pos2d, th)
-        # GQA across the shard boundary: local q heads are the contiguous
-        # global heads [idx·hq_loc, …); select their kv heads explicitly.
-        grp = hq // hkv
-        if grp > 1:
-            k = jnp.repeat(k, grp, axis=2)
-            v = jnp.repeat(v, grp, axis=2)
-        start = jax.lax.axis_index("model") * hq_loc
-        k = jax.lax.dynamic_slice_in_dim(k, start, hq_loc, axis=2)
-        v = jax.lax.dynamic_slice_in_dim(v, start, hq_loc, axis=2)
-        out = blas.attention_math(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), causal=cfg.causal, window=win,
-        )
-        out = out.transpose(0, 2, 1, 3).reshape(b, s, hq_loc * hd)
-        y = jax.lax.dot_general(
-            out, wo, (((2,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        from repro.models.layers import psum_cast_dtype
-
-        y = jax.lax.psum(y.astype(psum_cast_dtype(xl.dtype)), "model")
-        return y.astype(xl.dtype)
-
-    fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(
-            P(dp, None, None), pos_spec, P(), P(),
-            P(None, "model"), P("model"),
-            P(None, None), P(None),
-            P(None, None), P(None),
-            P("model", None),
-        ),
-        out_specs=P(dp, None, None),
-        check_vma=False,
-    )
-    # Seam accounting for the block (global workload, recorded once).
-    b, s, dm = x.shape
-    itemsize = jnp.dtype(x.dtype).itemsize
-    engine().launch(
-        cm.gemm_cost(b * s, (hq + 2 * hkv) * hd + dm, dm, itemsize, op="gemm"),
-        dtype=str(x.dtype), shape_key=f"tp-attn-proj:{x.shape}",
-        pallas_eligible=True,
-    )
-    engine().launch(
-        cm.attention_cost(b, s, s, hq, hd, itemsize,
-                          window=None if window is None else None),
-        dtype=str(x.dtype), shape_key=f"tp-attn:{x.shape}",
-        pallas_eligible=True,
-    )
-    return fn(
-        x, positions, window_arr, theta_arr,
-        p["wq"], bq, p["wk"], bk, p["wv"], bv, p["wo"],
-    )
 
 
 def init_attention(key, cfg, dtype):
@@ -166,16 +40,28 @@ def init_attention(key, cfg, dtype):
     return p
 
 
-def _project_qkv(p, x, cfg, positions, rope_theta):
-    b, s, _ = x.shape
+def split_qkv(qkv: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split the fused (..., (Hq+2·Hkv)·hd) projection into per-head q/k/v."""
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = blas.linear(x, p["wq"], p.get("bq")).reshape(b, s, hq, hd)
-    k = blas.linear(x, p["wk"], p.get("bk")).reshape(b, s, hkv, hd)
-    v = blas.linear(x, p["wv"], p.get("bv")).reshape(b, s, hkv, hd)
+    nq, nk = hq * hd, hkv * hd
+    lead = qkv.shape[:-1]
+    q = qkv[..., :nq].reshape(*lead, hq, hd)
+    k = qkv[..., nq : nq + nk].reshape(*lead, hkv, hd)
+    v = qkv[..., nq + nk :].reshape(*lead, hkv, hd)
+    return q, k, v
+
+
+def _project_qkv(p, x, cfg, positions, rope_theta):
+    """Fused input projection (one seam dispatch) + rotary embedding."""
+    qkv = blas.qkv_project(
+        x, p["wq"], p["wk"], p["wv"],
+        bq=p.get("bq"), bk=p.get("bk"), bv=p.get("bv"),
+    )
+    q, k, v = split_qkv(qkv, cfg)
     if cfg.mrope:
         q = L.mrope(q, positions, rope_theta)
         k = L.mrope(k, positions, rope_theta)
-    elif cfg.causal or True:  # encoders also use rotary in this zoo (conv-pos stubbed)
+    else:  # encoders also use rotary in this zoo (conv-pos stubbed)
         pos2d = positions if positions.ndim == 2 else positions[0]
         q = L.rope(q, pos2d, rope_theta)
         k = L.rope(k, pos2d, rope_theta)
@@ -191,16 +77,18 @@ def attention_block(
     window=None,
     rope_theta=None,
 ) -> jax.Array:
-    """Full-sequence attention (training / prefill). x: (B, S, D)."""
-    b, s, _ = x.shape
-    rope_theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    """Full-sequence attention (training / prefill). x: (B, S, D).
+
+    Under an ambient model-parallel mesh the seam resolves the TP forms as
+    descriptor plans: ``qkv_project`` sequence-shards the input projection
+    (FLOPs / n_model, one tiled all-gather of the small qkv activations),
+    the attention host math partitions on the q-head dim, and the output
+    projection's ``tp_mode="row"`` shard_map psums once in bf16.
+    """
     import os as _os
 
-    mesh = _ambient_mesh()
-    if mesh is not None and not _os.environ.get("REPRO_DISABLE_TP_ATTN"):
-        out = _attention_block_tp(p, x, cfg, positions, window, rope_theta, mesh)
-        if out is not None:
-            return out
+    b, s, _ = x.shape
+    rope_theta = rope_theta if rope_theta is not None else cfg.rope_theta
     q, k, v = _project_qkv(p, x, cfg, positions, rope_theta)
     qh = q.transpose(0, 2, 1, 3)  # (B, Hq, S, hd)
     kh = k.transpose(0, 2, 1, 3)
@@ -210,7 +98,10 @@ def attention_block(
         eff_window = window  # may be a traced per-layer scalar
     out = blas.attention(qh, kh, vh, causal=cfg.causal, window=eff_window)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
-    return blas.matmul(out, p["wo"])
+    # The kill-switch disables BOTH TP forms of this block (the qkv_project
+    # plan honors it inside the seam): with it set, no shard_map lowers here.
+    tp_mode = None if _os.environ.get("REPRO_DISABLE_TP_ATTN") else "row"
+    return blas.matmul(out, p["wo"], tp_mode=tp_mode)
 
 
 def decode_attention_block(
@@ -260,36 +151,10 @@ def decode_attention_block(
         unwrapped_lo = jnp.maximum(cache_index - w + 1, 0)
         lo = jnp.where(cache_index >= s_cache, 0, unwrapped_lo)
 
-    # Dispatch through the seam: the flash-decode Pallas kernel streams the
-    # cache once (serving hot loop); the masked-math path is the shardable
-    # host form the dry-run lowers.
-    from repro.core import cost_model as cm
-    from repro.core.hero import engine
-
-    hd = cfg.head_dim
-    cost = cm.attention_cost(
-        b, 1, s_cache, cfg.num_heads, hd, jnp.dtype(x.dtype).itemsize
-    )
-    backend = engine().launch(
-        cost,
-        dtype=str(x.dtype),
-        shape_key=f"decode-attn:{k_cache.shape}",
-        pallas_eligible=hd >= 8 and x.dtype in (jnp.float32, jnp.bfloat16),
-    )
-    if backend == "device-pallas":
-        from repro.kernels import ops as kops
-
-        lo_b = jnp.broadcast_to(lo, (b,)).astype(jnp.int32)
-        hi_b = jnp.broadcast_to(hi, (b,)).astype(jnp.int32)
-        out = kops.flash_decode(
-            qh[:, :, 0, :], k_cache, v_cache, lo_b, hi_b,
-            interpret=engine().policy.interpret,
-        )[:, :, None, :]
-    else:
-        slots = jnp.arange(s_cache, dtype=jnp.int32)
-        kv_valid = jnp.logical_and(slots >= lo, slots < hi)
-        out = blas.attention_math(
-            qh, k_cache, v_cache, causal=False, kv_mask=kv_valid
-        )
+    # Through the seam: the flash-decode Pallas kernel streams the cache
+    # once (serving hot loop); the masked-math host form is the shardable
+    # path the dry-run lowers.  Routing, accounting and placement all come
+    # from the registered descriptor.
+    out = blas.decode_attention(qh, k_cache, v_cache, lo, hi)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, cfg.num_heads * cfg.head_dim)
     return blas.matmul(out, p["wo"]), (k_cache, v_cache)

@@ -1,0 +1,241 @@
+"""Graph-captured block forwards — the model zoo on lazy ``hnp`` graphs.
+
+``cfg.forward_mode = "graph"`` routes every transformer block through this
+module instead of the eager per-op seam calls.  Each block's forward is
+built as one ``repro.hnp`` expression graph inside an
+``hnp.offload_region()``, so the graph scheduler — not the call order —
+decides the launches:
+
+* independent same-shape projections in one wave **batch** into a single
+  ``gemm_batched`` launch (Mamba's z/x and B/C projection pairs);
+* elementwise epilogues (RMSNorm scale, SiLU/gate, residual adds) **fuse**
+  into their producer's launch — no extra dispatch record, no staging for
+  the chain's intermediates;
+* attention/SSM intermediates **stay device-resident** across the block:
+  each launch carries its exact ``resident_fraction``, so a qkv projection
+  consumed by the attention launch on the same device never pays the
+  host<->device staging region.
+
+Everything heavy dispatches through the same registered ``OffloadOp``
+descriptors as the eager path (``qkv_project``, ``attention``, ``ssd_scan``,
+``mlp_block``, ``moe_expert_ffn``, ``matmul``, ``rmsnorm_scale``), so eager
+and graph forwards are numerically identical per backend — the parity
+switch is exercised across host / device / pallas-interpret in
+``tests/test_models.py``.  Light glue the lazy frontend cannot express
+(RoPE trig, the depthwise conv, MoE sort/scatter routing) runs eagerly
+between forces; an ``offload_region`` shares residency across those forces.
+
+Works inside ``jax.jit``/``lax.scan`` tracing: forcing uses ``.block()``
+(never a host ``np.asarray``), so graph values may be tracers — dispatch
+and accounting happen at trace time exactly as for eager seam calls.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = [
+    "LAST_REPORTS",
+    "capture_reports",
+    "graph_block",
+    "graph_ffn",
+]
+
+# GraphReports of recently captured blocks, appended at capture time (once
+# per traced block).  Benchmarks and tests read fusion / batching / staging
+# off these; ``capture_reports()`` scopes and clears the list.  Outside a
+# capture scope only the most recent reports are kept, so a long-running
+# graph-mode process (serving loop) does not accumulate them unboundedly.
+LAST_REPORTS: List[Any] = []
+_MAX_REPORTS = 64
+_CAPTURING = False
+
+
+def _record_report(report) -> None:
+    LAST_REPORTS.append(report)
+    if not _CAPTURING and len(LAST_REPORTS) > _MAX_REPORTS:
+        del LAST_REPORTS[: -_MAX_REPORTS]
+
+
+@contextlib.contextmanager
+def capture_reports():
+    """Collect the GraphReports of every block captured inside the scope."""
+    global _CAPTURING
+    LAST_REPORTS.clear()
+    _CAPTURING = True
+    try:
+        yield LAST_REPORTS
+    finally:
+        _CAPTURING = False
+
+
+def _hnp():
+    import repro.hnp as hnp  # lazy: keep models import-light of the frontend
+
+    return hnp
+
+
+def _force(x):
+    """Force a LazyArray in place and return its (possibly tracer) value."""
+    return x.block().node.value if hasattr(x, "block") else x
+
+
+def _graph_norm(xa, p, cfg, kind: str):
+    """Norm as a graph node: RMSNorm is the registered ``rmsnorm_scale``
+    descriptor (one recorded host launch, graph-capturable); LayerNorm
+    (audio encoder only) runs eagerly between forces."""
+    hnp = _hnp()
+    if kind == "rmsnorm":
+        return hnp.rmsnorm_scale(xa, p["scale"], eps=cfg.norm_eps)
+    return hnp.array(L.layer_norm(_force(xa), p, cfg.norm_eps))
+
+
+def _graph_attention(p, h, shape, cfg, positions, window, rope_theta):
+    """QKV projection -> RoPE (eager trig) -> attention -> out projection."""
+    hnp = _hnp()
+    from repro.models.attention import split_qkv
+
+    b, s, _ = shape
+    hq, hd = cfg.num_heads, cfg.head_dim
+    qkv = hnp.qkv_project(
+        h, p["wq"], p["wk"], p["wv"],
+        bq=p.get("bq"), bk=p.get("bk"), bv=p.get("bv"),
+    )
+    q, k, v = split_qkv(_force(qkv), cfg)  # resident for the region
+    rope_theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if cfg.mrope:
+        q = L.mrope(q, positions, rope_theta)
+        k = L.mrope(k, positions, rope_theta)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = L.rope(q, pos2d, rope_theta)
+        k = L.rope(k, pos2d, rope_theta)
+    out = hnp.attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=cfg.causal, window=window,
+    )
+    o2 = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return hnp.matmul(o2, p["wo"])
+
+
+def _graph_mamba(p, h, shape, cfg, out_dtype):
+    """Projections (z/x and B/C pairs batch into gemm_batched) -> conv
+    (eager) -> ``ssd_scan`` with the SiLU gate fused into its launch ->
+    gated-norm -> out projection."""
+    hnp = _hnp()
+    from repro.models.ssm import _causal_conv, ssd_inputs
+
+    b, s, d = shape
+    g, n = cfg.ssm_num_groups, cfg.ssm_state_dim
+    h2 = h.reshape(b * s, d)
+    za = hnp.matmul(h2, p["wz"])       # same shape as wx -> one gemm_batched
+    xa = hnp.matmul(h2, p["wx"])
+    ba = hnp.matmul(h2, p["wb"])       # same shape as wc -> one gemm_batched
+    ca = hnp.matmul(h2, p["wc"])
+    dta = hnp.matmul(h2, p["wdt"], out_dtype=jnp.float32)
+    hnp.block_all(za, xa, ba, ca, dta)  # one wave: independent GEMMs batch
+
+    def val3(t):
+        return _force(t).reshape(b, s, -1)
+
+    z, xin, b_, c_, dt = val3(za), val3(xa), val3(ba), val3(ca), val3(dta)
+    conv_in = jnp.concatenate([xin, b_, c_], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    )
+    xin = conv_out[..., : cfg.d_inner]
+    b_ = conv_out[..., cfg.d_inner : cfg.d_inner + g * n]
+    c_ = conv_out[..., cfg.d_inner + g * n :]
+    xh, dt_f, a, bh_, ch_ = ssd_inputs(p, xin, b_, c_, dt, cfg)
+
+    ya = hnp.ssd_scan(
+        hnp.array(xh), dt_f, a, bh_, ch_, p["d_skip"], chunk=cfg.ssm_chunk
+    )
+    gate = jax.nn.silu(z.astype(jnp.float32))
+    hp = (cfg.ssm_num_heads, cfg.ssm_head_dim)
+    ya = ya * hnp.array(gate.reshape(b, s, *hp))  # fuses into the ssd launch
+    yn = ya.reshape(b, s, cfg.d_inner).astype(out_dtype)
+    yn = hnp.rmsnorm_scale(yn, p["norm"]["scale"], eps=cfg.norm_eps)
+    return hnp.matmul(yn, p["wo"])
+
+
+def _graph_moe(p, h, cfg):
+    """MoE FFN: the sort/scatter routing is not expressible as a lazy graph,
+    so it runs eagerly on the forced activations — its router matmul and the
+    whole grouped expert FFN still dispatch through their registered
+    descriptors, so the trace stays uniform."""
+    from repro.models import moe as M
+
+    out, aux = M.moe_ffn(p, _force(h), cfg)
+    return out, aux
+
+
+def graph_block(
+    p,
+    x: jax.Array,
+    cfg,
+    kind: str,
+    is_moe: bool,
+    *,
+    positions,
+    window=None,
+    rope_theta=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One pre-norm residual block as a captured ``hnp`` graph.
+
+    Mirrors ``transformer._apply_block`` exactly (same descriptors, same
+    math); returns ``(x, aux_loss)``.
+    """
+    hnp = _hnp()
+    aux = jnp.zeros((), jnp.float32)
+    with hnp.offload_region(f"{kind}-block") as region:
+        _record_report(region.report)
+        xa = hnp.array(x)
+        h1 = _graph_norm(xa, p["norm1"], cfg, cfg.norm_kind)
+        if kind == "attn":
+            mix = _graph_attention(
+                p["mixer"], h1, x.shape, cfg, positions, window, rope_theta
+            )
+        else:
+            mix = _graph_mamba(p["mixer"], h1, x.shape, cfg, x.dtype)
+        xres = xa + mix           # residual fuses into the mixer's launch
+        if cfg.family != "ssm":
+            h2 = _graph_norm(xres, p["norm2"], cfg, cfg.norm_kind)
+            if is_moe:
+                f, aux = _graph_moe(p["ffn"], h2, cfg)
+                out = xres + hnp.array(f)
+            else:
+                f = hnp.mlp_block(
+                    h2, p["ffn"]["w_up"], p["ffn"]["w_down"],
+                    gate=p["ffn"].get("w_gate"),
+                    b_up=p["ffn"].get("b_up"), b_down=p["ffn"].get("b_down"),
+                    kind=cfg.mlp_kind,
+                )
+                out = xres + f    # residual fuses into the mlp launch
+        else:
+            out = xres
+        return _force(out), aux
+
+
+def graph_ffn(p, x: jax.Array, cfg, *, residual=None) -> jax.Array:
+    """Dense FFN alone as a captured graph (decode path: mixers mutate the
+    KV/state caches eagerly, the FFN is the graph-captured half).
+
+    ``residual`` (the block input, pre-norm) is added as a graph node so it
+    fuses into the FFN launch; when None the bare FFN output is returned."""
+    hnp = _hnp()
+    with hnp.offload_region("ffn-block") as region:
+        _record_report(region.report)
+        f = hnp.mlp_block(
+            hnp.array(x), p["w_up"], p["w_down"], gate=p.get("w_gate"),
+            b_up=p.get("b_up"), b_down=p.get("b_down"), kind=cfg.mlp_kind,
+        )
+        if residual is not None:
+            f = hnp.array(residual) + f
+        return _force(f)

@@ -44,10 +44,11 @@ def init_norm(d: int, dtype, *, kind: str = "rmsnorm"):
 # ---------------------------------------------------------------------------
 
 def rms_norm(x: jax.Array, p, eps: float) -> jax.Array:
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-    y = xf * jax.lax.rsqrt(var + eps)
-    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    """RMSNorm through the registered ``rmsnorm_scale`` descriptor — the
+    norm epilogue every block pays is scored and traced like any other op
+    (host-only: it never wins an offload alone, but the auto policy can now
+    see it and the graph frontend captures it)."""
+    return blas.rmsnorm_scale(x, p["scale"], eps=eps)
 
 
 def layer_norm(x: jax.Array, p, eps: float) -> jax.Array:

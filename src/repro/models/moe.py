@@ -2,11 +2,21 @@
 
 Dispatch is megablox-style: token copies are sorted by assigned expert,
 packed into a static-capacity (E, C, d) buffer, run through the grouped
-expert GEMM (the BLAS seam's ``moe_gemm`` — experts become the outer
-parallel grid dim of the device kernel), and scattered back weighted by the
-router gates.  Static capacity keeps every tile MXU-dense and the whole
-thing shardable: the (E, …) dims partition over the ``model`` mesh axis
-(expert parallelism), and the gather/scatter lower to all-to-alls.
+expert FFN (the BLAS seam's registered ``moe_expert_ffn`` descriptor —
+experts become the outer parallel grid dim of the device kernel, and the
+expert-parallel shard_map is the descriptor's `plan`), and scattered back
+weighted by the router gates.  Static capacity keeps every tile MXU-dense
+and the whole thing shardable: the (E, …) dims partition over the ``model``
+mesh axis (expert parallelism), and the gather/scatter lower to all-to-alls.
+
+The explicit-collective path splits into three stages so the expert FFN
+dispatches through the seam like everything else: a route+pack shard_map
+(row-local sort/scatter, ONE all-to-all carrying each routed token to its
+expert's owner), the ``moe_expert_ffn`` dispatch (its plan keeps experts
+chip-local — in_specs match the pack stage's out_specs exactly, so no data
+moves), and a combine shard_map (all-to-all back + row-local unpack).
+This file contains zero raw ``lax.dot_general`` launch sites and zero bare
+``engine().launch`` accounting calls (guard-tested).
 
 Arctic's "dense residual" variant runs a standard dense FFN in parallel and
 sums the outputs.
@@ -75,13 +85,10 @@ def _router(p, xf, cfg):
     return gates.astype(xf.dtype), idx, aux_loss
 
 
-def _expert_mlp(p, eb, x_dtype):
-    """(E, ..., d) -> (E, ..., d) through the expert GEMMs (BLAS seam).
-    Shape-preserving on all free dims (see blas.expert_matmul)."""
-    g = blas.expert_matmul(eb, p["we_gate"])
-    u = blas.expert_matmul(eb, p["we_up"])
-    h = jax.nn.silu(g.astype(jnp.float32)).astype(x_dtype) * u
-    return blas.expert_matmul(h, p["we_down"])
+def _expert_mlp(p, eb):
+    """(E, ..., d) -> (E, ..., d) — ONE seam dispatch for the whole grouped
+    expert FFN (gate/up/silu/down); shape-preserving on all free dims."""
+    return blas.moe_expert_ffn(eb, p["we_gate"], p["we_up"], p["we_down"])
 
 
 def _moe_global(p, xf, gates, idx, cfg):
@@ -105,7 +112,7 @@ def _moe_global(p, xf, gates, idx, cfg):
 
     buf = jnp.zeros((e * cap + 1, d), xf.dtype)
     buf = buf.at[slot].set(xf[sorted_token] * keep[:, None].astype(xf.dtype))
-    y = _expert_mlp(p, buf[: e * cap].reshape(e, cap, d), xf.dtype)
+    y = _expert_mlp(p, buf[: e * cap].reshape(e, cap, d))
     y_flat = jnp.concatenate([y.reshape(e * cap, d), jnp.zeros((1, d), y.dtype)])
     contrib = y_flat[slot] * (sorted_gate * keep).astype(y.dtype)[:, None]
     return jnp.zeros((t, d), xf.dtype).at[sorted_token].add(contrib)
@@ -166,7 +173,7 @@ def _moe_grouped(p, xf, gates, idx, cfg):
     # a (data <-> model) all-to-all carrying each routed token once.
     ebuf = buf.reshape(g_, e, cap_g, d).swapaxes(0, 1)         # (E, G, Cg, d)
     ebuf = constrain(ebuf, "model", None, None, None)
-    y = _expert_mlp(p, ebuf, xf.dtype)                         # (E, G, Cg, d)
+    y = _expert_mlp(p, ebuf)                                   # (E, G, Cg, d)
     y_back = y.swapaxes(0, 1)                                  # all-to-all back
     y_back = constrain(y_back, "dp", None, None, None)
     y_flat = y_back.reshape(g_, e * cap_g, d)                  # unsharded merge
@@ -188,11 +195,15 @@ def _moe_shard_map(p, xf, cfg, mesh):
     own ~T/devices tokens locally (sort/rank/scatter never leave the chip),
     then ONE ``lax.all_to_all`` over the model axis carries each routed
     token copy to its expert's owner and one carries results back: the
-    minimal EP wire volume.  Experts are replicated across the data axis
-    (weights are model-sharded), so no cross-data traffic exists at all.
-    GSPMD could not be coaxed into this schedule (it kept materializing
-    all-gathers around the pack/unpack scatters — see §Perf iterations 2-4);
-    shard_map states it exactly.
+    minimal EP wire volume.  GSPMD could not be coaxed into this schedule
+    (it kept materializing all-gathers around the pack/unpack scatters —
+    see §Perf iterations 2-4); shard_map states it exactly.
+
+    The stage structure routes the expert FFN through the seam: route+pack
+    ends at an out_spec that *is* the ``moe_expert_ffn`` plan's in_spec
+    (experts model-sharded, peer-rows dp-sharded), so the descriptor
+    dispatch between the two shard_maps moves no data and the expert GEMMs
+    get the same cost/placement/residency record as every other op.
     """
     import numpy as _np
     from jax.sharding import PartitionSpec as P
@@ -206,8 +217,9 @@ def _moe_shard_map(p, xf, cfg, mesh):
     cap_ij = expert_capacity(tij, cfg)
     e_loc = e // n_model
     tok_spec = P(dp + ("model",), None)
+    flat_spec = P(dp + ("model",))
 
-    def local_fn(xf_loc, router, we_gate, we_up, we_down):
+    def route_pack(xf_loc, router):
         # ---- route + pack: all chip-local --------------------------------
         logits = (xf_loc @ router.astype(xf_loc.dtype)).astype(jnp.float32)
         gates, idx = _top_k_gates(logits, k)
@@ -238,54 +250,38 @@ def _moe_shard_map(p, xf, cfg, mesh):
         # (n_model peers, e_loc·cap_ij, d) -> (e_loc, n_model·cap_ij, d)
         ex = ex.reshape(n_model, e_loc, cap_ij, d).swapaxes(0, 1)
         ex = ex.reshape(e_loc, n_model * cap_ij, d)
+        sgk = sg * keep.astype(sg.dtype)
+        return ex, slot, st_, sgk, aux
 
-        # ---- expert MLP on the local experts ------------------------------
-        g = jax.lax.dot_general(
-            ex, we_gate, (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        ).astype(xf_loc.dtype)
-        u = jax.lax.dot_general(
-            ex, we_up, (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        ).astype(xf_loc.dtype)
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(xf_loc.dtype) * u
-        y = jax.lax.dot_general(
-            h, we_down, (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        ).astype(xf_loc.dtype)
-
-        # ---- return trip + local unpack -----------------------------------
-        y = y.reshape(e_loc, n_model, cap_ij, d).swapaxes(0, 1)
-        y = y.reshape(n_model, e_loc * cap_ij, d)
-        y = jax.lax.all_to_all(y, "model", split_axis=0, concat_axis=0)
-        y = y.reshape(e * cap_ij, d)
-        contrib = y[slot] * (sg * keep.astype(sg.dtype))[:, None]
-        out = jnp.zeros((tij, d), xf_loc.dtype).at[st_].add(contrib)
-        return out, aux
-
-    fn = shard_map(
-        local_fn,
+    ex, slot, st_, sgk, aux = shard_map(
+        route_pack,
         mesh=mesh,
-        in_specs=(tok_spec, P(None, None), P("model", None, None),
-                  P("model", None, None), P("model", None, None)),
-        out_specs=(tok_spec, P()),
+        in_specs=(tok_spec, P(None, None)),
+        out_specs=(P("model", dp, None), flat_spec, flat_spec, flat_spec, P()),
         check_vma=False,
-    )
-    # Seam accounting (global workload) — shard_map bypasses blas.*.
-    from repro.core import cost_model as _cm
-    from repro.core.hero import engine as _engine
+    )(xf, p["router"])
 
-    cap_total = e * expert_capacity(t, cfg)
-    for f_dim in (cfg.moe_d_ff, cfg.moe_d_ff, d):
-        _engine().launch(
-            _cm.gemm_cost(cap_total // e, f_dim, d, 2, batch=e, op="moe_gemm"),
-            dtype=str(xf.dtype),
-            shape_key=f"shardmap-moe:{t}x{d}",
-            pallas_eligible=True,
-        )
-    return fn(
-        xf, p["router"], p["we_gate"], p["we_up"], p["we_down"]
-    )
+    # ---- expert FFN through the seam: one recorded dispatch whose plan
+    # shard_maps experts exactly where the pack stage left them ------------
+    y = _expert_mlp(p, ex)
+
+    def combine(y_loc, slot_l, st_l, sgk_l):
+        # ---- return trip + local unpack -----------------------------------
+        y_ = y_loc.reshape(e_loc, n_model, cap_ij, d).swapaxes(0, 1)
+        y_ = y_.reshape(n_model, e_loc * cap_ij, d)
+        y_ = jax.lax.all_to_all(y_, "model", split_axis=0, concat_axis=0)
+        y_ = y_.reshape(e * cap_ij, d)
+        contrib = y_[slot_l] * sgk_l[:, None]
+        return jnp.zeros((tij, d), y_.dtype).at[st_l].add(contrib)
+
+    out = shard_map(
+        combine,
+        mesh=mesh,
+        in_specs=(P("model", dp, None), flat_spec, flat_spec, flat_spec),
+        out_specs=tok_spec,
+        check_vma=False,
+    )(y, slot, st_, sgk)
+    return out, aux
 
 
 def _shard_map_usable(cfg, t: int) -> bool:

@@ -1,17 +1,18 @@
 """Mamba-2 mixer in SSD (state-space duality) form.
 
 SSD recasts the selective-SSM recurrence as chunked *matmuls* — the ideal
-workload for a GEMM-offload substrate.  Per chunk c of length Q:
-
-  Y_diag[c] = (L(c) ∘ (C_c B_c^T)) (dt·X)_c        — quadratic, via the
-               ``ssd_chunk_diag`` Pallas kernel / oracle
-  S_c       = Σ_j exp(cum_last − cum_j) dt_j B_j ⊗ x_j   — chunk state (N, P)
-  carry     : S←exp(Σda) S + S_c  (lax.scan over chunks)
-  Y_off[c]  = exp(cum) C_c · S_{c−1}
+workload for a GEMM-offload substrate.  The whole chunked core (within-chunk
+quadratic term, inter-chunk state recurrence, D skip) is one registered
+``ssd_scan`` descriptor: its host lowering is the jnp oracle composition,
+its Pallas lowering runs the ``ssd_chunk_diag`` kernel, and its `plan` is
+the head-sharded TP shard_map (all SSD math is per-head, so a model-sharded
+head axis needs zero collectives).  Projections go through ``blas.matmul``;
+the output projection's ``tp_mode="row"`` form psums once in bf16.
 
 Decode is the raw one-step recurrence on an (B, H, N, P) fp32 state cache —
 O(1) per token, which is what makes the ``long_500k`` cell runnable.
-All projections go through the BLAS seam.
+This file contains zero raw ``lax.dot_general`` launch sites and zero bare
+``engine().launch`` accounting calls (guard-tested).
 """
 
 from __future__ import annotations
@@ -23,8 +24,6 @@ import jax.numpy as jnp
 
 from repro.core import blas
 from repro.models import layers as L
-
-from repro.compat import shard_map
 
 __all__ = ["init_mamba", "mamba_block", "decode_mamba_block", "mamba_state_shapes"]
 
@@ -73,78 +72,30 @@ def _project(p, x, cfg):
     return z, xin, b_, c_, dt
 
 
-def _ssd_chunked(xh, dt, a, bh_, ch_, d_skip, chunk):
-    """Chunked SSD core: (B, S, H, P) -> (B, S, H, P), any head count.
-
-    All math is per-head — under the TP shard_map each device runs this on
-    its local heads with zero collectives."""
-    bsz, s, h, pdim = xh.shape
-    n = bh_.shape[-1]
-    q = min(chunk, s)
-    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
-    nc = s // q
-    da = dt * a                                               # (B, S, H)
-
-    xdt = xh * dt[..., None]
-
-    def to_bh(t):
-        t = t.reshape(bsz, nc, q, h, -1).transpose(0, 3, 1, 2, 4)
-        return t.reshape(bsz * h, nc, q, t.shape[-1])
-
-    da_c = da.reshape(bsz, nc, q, h)
-    cum_c = jnp.cumsum(da_c, axis=2)                          # (B, C, Q, H)
-    cum_bh = cum_c.transpose(0, 3, 1, 2).reshape(bsz * h, nc, q)
-
-    x_bh = to_bh(xdt)
-    b_bh = to_bh(bh_)
-    c_bh = to_bh(ch_)
-
-    from repro.kernels import ref as kref
-
-    y_diag = kref.ssd_chunk_diag_ref(
-        x_bh.astype(jnp.float32), cum_bh, b_bh.astype(jnp.float32),
-        c_bh.astype(jnp.float32),
-    )
-
-    decay_to_end = jnp.exp(cum_bh[:, :, -1:] - cum_bh)
-    states = jnp.einsum(
-        "zcq,zcqn,zcqp->zcnp",
-        decay_to_end,
-        b_bh.astype(jnp.float32),
-        x_bh.astype(jnp.float32),
-    )
-    chunk_decay = jnp.exp(cum_bh[:, :, -1])
-
-    def scan_fn(carry, inp):
-        st, dec = inp
-        prev = carry
-        return dec[:, None, None] * prev + st, prev
-
-    init = jnp.zeros((bsz * h, n, pdim), jnp.float32)
-    _, prev_states = jax.lax.scan(
-        scan_fn, init, (states.transpose(1, 0, 2, 3), chunk_decay.T)
-    )
-    prev_states = prev_states.transpose(1, 0, 2, 3)
-
-    y_off = jnp.einsum(
-        "zcqn,zcnp,zcq->zcqp",
-        c_bh.astype(jnp.float32), prev_states, jnp.exp(cum_bh),
-    )
-    y = (y_diag + y_off).reshape(bsz, h, s, pdim).transpose(0, 2, 1, 3)
-    return y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+def ssd_inputs(p, xin, b_, c_, dt, cfg):
+    """Shape the conv outputs into the per-head ``ssd_scan`` operands."""
+    bsz, s = xin.shape[0], xin.shape[1]
+    h, pdim = cfg.ssm_num_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_num_groups, cfg.ssm_state_dim
+    dt_f = jax.nn.softplus(dt + p["dt_bias"])                 # (B, S, H) fp32
+    a = -jnp.exp(p["a_log"])                                  # (H,)
+    xh = xin.reshape(bsz, s, h, pdim)
+    rep = h // g
+    bh_ = jnp.repeat(b_.reshape(bsz, s, g, n), rep, axis=2)
+    ch_ = jnp.repeat(c_.reshape(bsz, s, g, n), rep, axis=2)
+    return xh, dt_f, a, bh_, ch_
 
 
 def mamba_block(p, x: jax.Array, cfg) -> jax.Array:
-    """Full-sequence SSD pass. x: (B, S, D) -> (B, S, D)."""
-    from repro.sharding.annotate import _ambient_mesh
+    """Full-sequence SSD pass. x: (B, S, D) -> (B, S, D).
 
-    mesh = _ambient_mesh()
-    if mesh is not None:
-        y = _mamba_block_tp(p, x, cfg, mesh)
-        if y is not None:
-            return y
+    Every heavy piece dispatches through a descriptor: the five input
+    projections (``matmul``), the chunked SSD core (``ssd_scan`` — under an
+    ambient mesh its plan shards heads with zero collectives), and the
+    output projection (``matmul`` with the ``tp_mode="row"`` single-psum TP
+    form).  The depthwise conv and gating stay elementwise glue.
+    """
     bsz, s, d = x.shape
-    h, pdim = cfg.ssm_num_heads, cfg.ssm_head_dim
     g, n = cfg.ssm_num_groups, cfg.ssm_state_dim
 
     z, xin, b_, c_, dt = _project(p, x, cfg)
@@ -156,159 +107,12 @@ def mamba_block(p, x: jax.Array, cfg) -> jax.Array:
     b_ = conv_out[..., cfg.d_inner : cfg.d_inner + g * n]
     c_ = conv_out[..., cfg.d_inner + g * n :]
 
-    dt = jax.nn.softplus(dt + p["dt_bias"])                   # (B, S, H) fp32
-    a = -jnp.exp(p["a_log"])                                  # (H,)
-
-    xh = xin.reshape(bsz, s, h, pdim)
-    rep = h // g
-    bh_ = jnp.repeat(b_.reshape(bsz, s, g, n), rep, axis=2)
-    ch_ = jnp.repeat(c_.reshape(bsz, s, g, n), rep, axis=2)
-
-    y = _ssd_chunked(xh, dt, a, bh_, ch_, p["d_skip"], cfg.ssm_chunk)
+    xh, dt_f, a, bh_, ch_ = ssd_inputs(p, xin, b_, c_, dt, cfg)
+    y = blas.ssd_scan(xh, dt_f, a, bh_, ch_, p["d_skip"], chunk=cfg.ssm_chunk)
     y = y.reshape(bsz, s, cfg.d_inner)
-    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * blas.silu(z.astype(jnp.float32))
     y = L.rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
-    return blas.matmul(y, p["wo"])
-
-
-def _mamba_block_tp(p, x, cfg, mesh):
-    """Whole Mamba-2 block under one shard_map (§Perf iteration 10).
-
-    SSM heads are model-sharded; every piece of the SSD math is per-head
-    and therefore chip-local (GSPMD all-reduced the C·Bᵀ chunk einsums —
-    55 % of mamba2's wire — because the merged (B·H) batch dim defeats its
-    propagation).  Cross-device traffic: the B/C/dt activations are
-    computed on sequence slices and all-gathered (tiny), the gated-norm
-    variance is one scalar-field psum, and the out-projection psums once —
-    the same schedule as the TP attention/MLP blocks.
-    """
-    import numpy as np
-    from jax.sharding import PartitionSpec as P
-
-    if x.ndim != 3 or "model" not in getattr(mesh, "axis_names", ()):
-        return None
-    n_model = mesh.shape["model"]
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
-    h, pdim = cfg.ssm_num_heads, cfg.ssm_head_dim
-    g, n = cfg.ssm_num_groups, cfg.ssm_state_dim
-    di = cfg.d_inner
-    bsz, s, d = x.shape
-    if (
-        n_model <= 1
-        or h % n_model
-        or di % n_model
-        or bsz % n_dp
-        or s % cfg.ssm_chunk
-    ):
-        return None
-    h_loc = h // n_model
-    di_loc = di // n_model
-    rep = h // g
-
-    def local(xl, wz, wx, wb, wc, wdt, dt_bias, a_log, d_skip, conv_w,
-              conv_b, norm_scale, wo):
-        b, s_, _ = xl.shape
-        idx = jax.lax.axis_index("model")
-
-        def dot(u, w):
-            return jax.lax.dot_general(
-                u, w, (((2,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ).astype(xl.dtype)
-
-        z = dot(xl, wz)                                   # (b, s, di_loc)
-        xin = dot(xl, wx)                                 # (b, s, di_loc)
-        dt_l = jax.lax.dot_general(
-            xl, wdt, (((2,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )                                                 # (b, s, h_loc) f32
-        # B/C on sequence slices, gathered (replicated compute is 16x flops)
-        if s_ % n_model == 0:
-            seg = s_ // n_model
-            xs = jax.lax.dynamic_slice_in_dim(xl, idx * seg, seg, axis=1)
-            b_ = jax.lax.all_gather(dot(xs, wb), "model", axis=1, tiled=True)
-            c_ = jax.lax.all_gather(dot(xs, wc), "model", axis=1, tiled=True)
-        else:
-            b_ = dot(xl, wb)
-            c_ = dot(xl, wc)
-
-        # depthwise causal conv: local head slice of the x-part weights
-        conv_wx = jax.lax.dynamic_slice_in_dim(conv_w, idx * di_loc, di_loc, axis=1)
-        conv_bx = jax.lax.dynamic_slice_in_dim(conv_b, idx * di_loc, di_loc, axis=0)
-        xin = jax.nn.silu(
-            _causal_conv(xin, conv_wx, conv_bx).astype(jnp.float32)
-        )
-        conv_wbc = conv_w[:, di:]
-        conv_bbc = conv_b[di:]
-        bc = jnp.concatenate([b_, c_], axis=-1)
-        bc = jax.nn.silu(_causal_conv(bc, conv_wbc, conv_bbc).astype(jnp.float32))
-        b_, c_ = bc[..., : g * n], bc[..., g * n :]
-
-        dt_f = jax.nn.softplus(dt_l + dt_bias)            # (b, s, h_loc)
-        a = -jnp.exp(a_log)                               # (h_loc,)
-        xh = xin.reshape(b, s_, h_loc, pdim)
-        brep = jnp.repeat(b_.reshape(b, s_, g, n), rep, axis=2)
-        crep = jnp.repeat(c_.reshape(b, s_, g, n), rep, axis=2)
-        brep = jax.lax.dynamic_slice_in_dim(brep, idx * h_loc, h_loc, axis=2)
-        crep = jax.lax.dynamic_slice_in_dim(crep, idx * h_loc, h_loc, axis=2)
-
-        y = _ssd_chunked(xh, dt_f, a, brep, crep, d_skip, cfg.ssm_chunk)
-        y = y.reshape(b, s_, di_loc)
-        y = y * jax.nn.silu(z.astype(jnp.float32))
-
-        # gated RMSNorm over the FULL d_inner: one scalar-field psum
-        local_sq = jnp.sum(jnp.square(y), axis=-1, keepdims=True)
-        var = jax.lax.psum(local_sq, "model") / di
-        y = y * jax.lax.rsqrt(var + cfg.norm_eps)
-        y = (y * norm_scale.astype(jnp.float32)).astype(xl.dtype)
-
-        out = jax.lax.dot_general(
-            y, wo, (((2,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        from repro.models.layers import psum_cast_dtype
-
-        out = jax.lax.psum(out.astype(psum_cast_dtype(xl.dtype)), "model")
-        return out.astype(xl.dtype)
-
-    fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(
-            P(dp, None, None),
-            P(None, "model"), P(None, "model"),        # wz, wx
-            P(None, None), P(None, None),              # wb, wc
-            P(None, "model"),                          # wdt
-            P("model"), P("model"), P("model"),        # dt_bias, a_log, d_skip
-            P(None, None), P(None),                    # conv_w, conv_b
-            P("model"),                                # norm scale
-            P("model", None),                          # wo
-        ),
-        out_specs=P(dp, None, None),
-        check_vma=False,
-    )
-    # seam accounting (global workload)
-    from repro.core import cost_model as _cm
-    from repro.core.hero import engine as _engine
-
-    itemsize = jnp.dtype(x.dtype).itemsize
-    _engine().launch(
-        _cm.gemm_cost(bsz * s, 2 * di + 2 * g * n + h + d, d, itemsize),
-        dtype=str(x.dtype), shape_key=f"tp-mamba-proj:{x.shape}",
-        pallas_eligible=True,
-    )
-    _engine().launch(
-        _cm.gemm_cost(bsz * s, 2 * n, cfg.ssm_chunk, itemsize, batch=h,
-                      op="ssd_chunk"),
-        dtype=str(x.dtype), shape_key=f"tp-ssd:{x.shape}",
-        pallas_eligible=True,
-    )
-    return fn(
-        x, p["wz"], p["wx"], p["wb"], p["wc"], p["wdt"], p["dt_bias"],
-        p["a_log"], p["d_skip"], p["conv_w"], p["conv_b"],
-        p["norm"]["scale"], p["wo"],
-    )
+    return blas.matmul(y, p["wo"], tp_mode="row")
 
 
 def mamba_state_shapes(cfg, batch: int):

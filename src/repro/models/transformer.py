@@ -72,6 +72,16 @@ def _apply_block(
     window=None,
     rope_theta=None,
 ):
+    if cfg.forward_mode == "graph":
+        # Whole-block graph capture: the hnp scheduler fuses elementwise
+        # epilogues, batches independent projections and threads residency
+        # across the block (models/forward.py).  Same descriptors, same math.
+        from repro.models import forward as F
+
+        return F.graph_block(
+            p, x, cfg, kind, is_moe,
+            positions=positions, window=window, rope_theta=rope_theta,
+        )
     h = L.apply_norm(x, p["norm1"], cfg.norm_eps, cfg.norm_kind)
     if kind == "attn":
         mix = A.attention_block(
@@ -245,6 +255,13 @@ def _decode_block(p, x, cache_slices, cache_index, cfg, kind, *, window, rope_th
         if cfg.layer_is_moe(0) and cfg.uniform_stack:
             f, _ = M.moe_ffn(p["ffn"], h, cfg)
         elif "ffn" in p:
+            if cfg.forward_mode == "graph":
+                # Decode's graph half: mixers mutate caches eagerly, the
+                # dense FFN is captured (residual fused into its launch).
+                from repro.models import forward as F
+
+                f = F.graph_ffn(p["ffn"], h, cfg, residual=x)
+                return f, new_cache
             f = L.mlp_apply(p["ffn"], h, cfg.mlp_kind)
         else:
             f = 0.0

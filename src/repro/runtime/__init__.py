@@ -1,6 +1,6 @@
 """repro.runtime — fault tolerance, stragglers, elastic scaling."""
 
-from repro.runtime.elastic import ElasticPlan, replan
+from repro.runtime.elastic import ElasticPlan, ResizeEvent, replan, resize_cluster
 from repro.runtime.fault_tolerance import (
     ClusterSupervisor,
     DeviceLossEvent,
@@ -14,7 +14,9 @@ __all__ = [
     "ClusterSupervisor",
     "DeviceLossEvent",
     "ElasticPlan",
+    "ResizeEvent",
     "replan",
+    "resize_cluster",
     "HeartbeatMonitor",
     "StragglerMonitor",
     "WorkerFailure",

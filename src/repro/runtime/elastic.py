@@ -1,4 +1,5 @@
-"""Elastic re-scaling: restore any checkpoint onto any mesh.
+"""Elastic re-scaling: restore any checkpoint onto any mesh, and grow or
+shrink the offload cluster at checkpoint boundaries.
 
 Checkpoints store full logical arrays (see repro.checkpoint), so scaling a
 job from N to M pods is: build the new mesh, recompute PartitionSpecs for
@@ -8,6 +9,15 @@ each host's slice directly.
 
 ``replan`` also rescales the data-parallel batch splitting: the global
 batch is invariant; hosts' local batches change.
+
+``resize_cluster`` is the PMCA-cluster half of the same story: at a
+checkpoint boundary the :class:`~repro.core.hero.HeroCluster` grows by
+appending cold devices or shrinks by draining the removed lanes —
+in-flight launches reschedule through the active scheduler and pinned
+:class:`~repro.core.hero.DeviceHandle` s homed on removed devices are
+re-staged onto keepers over the same host-copy path the
+:class:`~repro.runtime.fault_tolerance.ClusterSupervisor` uses on device
+loss (every move recorded on the new lane's trace).
 """
 
 from __future__ import annotations
@@ -19,7 +29,7 @@ import jax
 
 from repro.sharding import batch_pspecs, named, opt_pspecs, param_pspecs
 
-__all__ = ["ElasticPlan", "replan"]
+__all__ = ["ElasticPlan", "ResizeEvent", "replan", "resize_cluster"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,4 +65,33 @@ def replan(
         global_batch=global_batch,
         local_batch=global_batch // num_hosts,
         num_hosts=num_hosts,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeEvent:
+    """One cluster grow/shrink at a checkpoint boundary."""
+
+    before: int
+    after: int
+    # Handles re-staged off removed devices: (handle name, new device id).
+    restaged: Tuple[Tuple[str, int], ...] = ()
+
+
+def resize_cluster(cluster, num_devices: int, *, supervisor=None) -> ResizeEvent:
+    """Grow/shrink a :class:`HeroCluster` at a checkpoint boundary.
+
+    Thin policy wrapper over :meth:`HeroCluster.resize`: grow appends cold
+    devices (existing queues, residency and pinned handles untouched);
+    shrink reschedules the removed lanes' in-flight work and re-stages
+    their pinned handles onto keepers via the existing supervisor path.
+    Pass the watching :class:`ClusterSupervisor` so its heartbeat table
+    follows the new topology.
+    """
+    before = cluster.num_devices
+    moves = cluster.resize(num_devices)
+    if supervisor is not None:
+        supervisor.resync()
+    return ResizeEvent(
+        before=before, after=cluster.num_devices, restaged=tuple(moves)
     )

@@ -205,6 +205,15 @@ class ClusterSupervisor:
         self.cluster.restore_device(device_id)
         self._last[device_id] = self.clock()
 
+    def resync(self) -> None:
+        """Re-key the heartbeat table to the cluster's current topology
+        (elastic resize at a checkpoint boundary adds/removes devices)."""
+        now = self.clock()
+        current = {d.device_id for d in self.cluster.devices}
+        self._last = {
+            i: self._last.get(i, now) for i in sorted(current)
+        }
+
 
 def run_with_recovery(
     *,

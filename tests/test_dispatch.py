@@ -9,6 +9,7 @@ here fails the suite, so the descriptor table and its tests stay in
 one-to-one view.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -59,6 +60,87 @@ def _samples(dtype):
         u = (xf @ wu.astype(jnp.float32)).astype(dtype)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
         return (h.astype(jnp.float32) @ wd.astype(jnp.float32)).astype(dtype)
+
+    # fused qkv projection operands (GQA: kv heads smaller than q heads)
+    wqp = _arr(32, 48, dtype=dtype)
+    wkp = _arr(32, 16, dtype=dtype)
+    wvp = _arr(32, 16, dtype=dtype)
+    bqp = _arr(48, dtype=dtype)
+    bkp = _arr(16, dtype=dtype)
+    bvp = _arr(16, dtype=dtype)
+
+    def _qkv_ref():
+        xf = x3.astype(jnp.float32)
+
+        def proj(w, b):
+            return (xf @ w.astype(jnp.float32) + b.astype(jnp.float32))
+
+        return jnp.concatenate(
+            [proj(wqp, bqp), proj(wkp, bkp), proj(wvp, bvp)], axis=-1
+        ).astype(dtype)
+
+    # moe_expert_ffn operands
+    wge = _arr(2, 16, 12, dtype=dtype)
+    wue = _arr(2, 16, 12, dtype=dtype)
+    wde = _arr(2, 12, 16, dtype=dtype)
+
+    def _moe_ffn_ref():
+        import jax
+
+        xf = xe.astype(jnp.float32)
+        g = jnp.einsum("ecd,edf->ecf", xf, wge.astype(jnp.float32)).astype(dtype)
+        u = jnp.einsum("ecd,edf->ecf", xf, wue.astype(jnp.float32)).astype(dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+        return jnp.einsum(
+            "ecf,efd->ecd", h.astype(jnp.float32), wde.astype(jnp.float32)
+        ).astype(dtype)
+
+    # ssd_scan operands (chunked SSD core vs naive recurrence oracle)
+    sb, ss, sh, sp, sn = 1, 16, 2, 8, 4
+    sx = _arr(sb, ss, sh, sp, dtype=dtype)
+    sdt = jnp.asarray(
+        np.abs(RNG.normal(size=(sb, ss, sh))) * 0.5, jnp.float32
+    )
+    sa = jnp.asarray(-np.abs(RNG.normal(size=(sh,))), jnp.float32)
+    sbh = _arr(sb, ss, sh, sn, dtype=dtype)
+    sch = _arr(sb, ss, sh, sn, dtype=dtype)
+    sskip = jnp.ones((sh,), jnp.float32)
+
+    def _ssd_ref():
+        xv = _np32(sx)
+        y = np.zeros((sb, ss, sh, sp), np.float32)
+        st = np.zeros((sb, sh, sn, sp), np.float32)
+        for t in range(ss):
+            dec = np.exp(np.asarray(sdt[:, t]) * np.asarray(sa))
+            st = dec[..., None, None] * st + np.einsum(
+                "bh,bhn,bhp->bhnp",
+                np.asarray(sdt[:, t]), _np32(sbh[:, t]), xv[:, t],
+            )
+            y[:, t] = np.einsum("bhn,bhnp->bhp", _np32(sch[:, t]), st)
+        return y + xv * np.asarray(sskip)[None, None, :, None]
+
+    # decode_attention operands (one token against a GQA KV cache)
+    qd = _arr(2, 4, 1, 32, dtype=dtype)
+    kd = _arr(2, 2, 24, 32, dtype=dtype)
+    vd = _arr(2, 2, 24, 32, dtype=dtype)
+    lo, hi = jnp.int32(0), jnp.int32(17)
+
+    def _decode_ref():
+        slots = jnp.arange(24, dtype=jnp.int32)
+        return blas.attention_math(
+            qd, kd, vd, causal=False,
+            kv_mask=jnp.logical_and(slots >= lo, slots < hi),
+        )
+
+    scale_rn = _arr(32, dtype=dtype)
+    xrn = _arr(24, 32, dtype=dtype)
+
+    def _rmsnorm_ref():
+        xf = _np32(xrn)
+        var = np.mean(np.square(xf), axis=-1, keepdims=True)
+        y = xf / np.sqrt(var + 1e-6) * _np32(scale_rn)
+        return jnp.asarray(y).astype(dtype)
+
     return {
         "gemm": (
             lambda: blas.gemm(a2, b2),
@@ -113,6 +195,47 @@ def _samples(dtype):
             lambda: jnp.sqrt(
                 jnp.sum(jnp.square(v1.astype(jnp.float32)))
             ).astype(v1.dtype),
+        ),
+        "qkv_project": (
+            lambda: blas.qkv_project(
+                x3, wqp, wkp, wvp, bq=bqp, bk=bkp, bv=bvp
+            ),
+            _qkv_ref,
+        ),
+        "ssd_scan": (
+            lambda: blas.ssd_scan(sx, sdt, sa, sbh, sch, sskip, chunk=8),
+            _ssd_ref,
+        ),
+        "moe_expert_ffn": (
+            lambda: blas.moe_expert_ffn(xe, wge, wue, wde),
+            _moe_ffn_ref,
+        ),
+        "decode_attention": (
+            lambda: blas.decode_attention(qd, kd, vd, lo, hi),
+            _decode_ref,
+        ),
+        "sum": (
+            lambda: blas.reduce_sum(x3, axis=-1),
+            lambda: jnp.sum(x3, axis=-1),
+        ),
+        "mean": (
+            lambda: blas.reduce_mean(x3, axis=0, keepdims=True),
+            lambda: jnp.mean(x3, axis=0, keepdims=True),
+        ),
+        "relu": (
+            lambda: blas.relu(a2),
+            lambda: jnp.maximum(a2, 0.0),
+        ),
+        "silu": (
+            lambda: blas.silu(a2),
+            lambda: (
+                a2.astype(jnp.float32)
+                * jax.nn.sigmoid(a2.astype(jnp.float32))
+            ).astype(a2.dtype),
+        ),
+        "rmsnorm_scale": (
+            lambda: blas.rmsnorm_scale(xrn, scale_rn, eps=1e-6),
+            _rmsnorm_ref,
         ),
     }
 
@@ -175,11 +298,15 @@ def test_every_trace_record_carries_valid_device_id():
             assert 0 <= r.device_id < n_dev, (r.op, r.device_id)
         else:
             assert r.device_id == -1, (r.op, r.device_id)
-    # syrk is host-only (paper compiles syrk.c for the host alone) ...
-    assert by_op["syrk"].backend == "host"
+    # host-only descriptors (syrk per the paper; the light reductions/
+    # elementwise ops) are recorded on the host ...
+    host_only = {n for n in dsp.registered_ops() if dsp.get_op(n).host_only}
+    assert "syrk" in host_only
+    for name in host_only:
+        assert by_op[name].backend == "host", name
     # ... and everything else must be offloaded AND placed under mode=device
     for r in t.records:
-        if r.op != "syrk":
+        if r.op not in host_only:
             assert r.backend.startswith("device") and r.device_id >= 0, r.op
 
 

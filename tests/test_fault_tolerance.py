@@ -157,6 +157,63 @@ def test_supervisor_restages_lost_device_handles():
     assert rec.device_id == new_dev and rec.regions.copy_s > 0
 
 
+# ---------------------------------------------------------------------------
+# Elastic cluster grow/shrink at checkpoint boundaries
+# ---------------------------------------------------------------------------
+
+def test_elastic_grow_preserves_state():
+    from repro.core.hero import HeroCluster
+    from repro.runtime import resize_cluster
+    from repro.runtime.fault_tolerance import ClusterSupervisor
+
+    c = HeroCluster(num_devices=2)
+    h = c.pin_handle("weights", 1 << 16, device_id=1)
+    sup = ClusterSupervisor(cluster=c)
+    ev = resize_cluster(c, 4, supervisor=sup)
+    assert (ev.before, ev.after) == (2, 4) and ev.restaged == ()
+    assert c.num_devices == 4
+    # existing handle untouched; new devices cold and heartbeat-tracked
+    assert h.valid and h.device_id == 1
+    assert not c.device(3).booted
+    assert set(sup._last) == {0, 1, 2, 3}
+    assert sup.silent_devices() == []
+
+
+def test_elastic_shrink_restages_handles_and_reschedules_work():
+    from repro.core import offload_trace
+    from repro.core.hero import HeroCluster, LaunchTicket
+    from repro.runtime import resize_cluster
+
+    c = HeroCluster(num_devices=4)
+    keep = c.pin_handle("kv-keep", 1 << 14, device_id=0)
+    lost = c.pin_handle("kv-lost", 1 << 20, device_id=3)
+    c.device(3).enqueue(LaunchTicket(op="gemm", shape_key="w", offload_s=1.0))
+    with offload_trace() as t:
+        ev = resize_cluster(c, 2)
+    assert (ev.before, ev.after) == (4, 2) and c.num_devices == 2
+    ((name, new_dev),) = ev.restaged
+    assert name == "kv-lost" and 0 <= new_dev < 2
+    assert lost.valid and lost.device_id == new_dev
+    assert c.device(new_dev).is_resident("kv-lost")
+    assert keep.device_id == 0
+    # the re-stage paid a full host->device copy on the keeper's lane
+    (rec,) = [r for r in t.records if r.op == "restage"]
+    assert rec.device_id == new_dev and rec.regions.copy_s > 0
+    # the removed lane's in-flight ticket moved onto a keeper
+    assert sum(len(c.device(i).inflight) for i in range(2)) >= 1
+
+
+def test_elastic_resize_bounds():
+    import pytest as _pytest
+
+    from repro.core.hero import HeroCluster
+
+    c = HeroCluster(num_devices=2)
+    with _pytest.raises(ValueError):
+        c.resize(0)
+    assert c.resize(2) == []  # no-op
+
+
 def test_supervisor_total_loss_leaves_handles_unstaged():
     from repro.core.hero import HeroCluster
     from repro.runtime.fault_tolerance import ClusterSupervisor

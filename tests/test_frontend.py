@@ -147,6 +147,52 @@ def test_elementwise_chain_fuses_into_producer_launch():
 
 
 # ---------------------------------------------------------------------------
+# 2b. Common-subexpression + dead-node elimination
+# ---------------------------------------------------------------------------
+
+def test_cse_duplicate_subtree_launches_once():
+    """Structurally identical subtrees collapse before scheduling: the
+    duplicated tanh(x @ w) chain dispatches ONE gemm, the report counts the
+    eliminated nodes, and both outside references stay valid."""
+    x, w = _arr(24, 32), _arr(32, 24)
+    a = hnp.array(x)
+    y1 = hnp.tanh(a @ w)
+    y2 = hnp.tanh(a @ w)          # distinct nodes, identical structure
+    total = y1 + y2
+    with offload_policy(mode="device"):
+        with offload_trace() as t:
+            with hnp.offload_region("cse") as region:
+                got = hnp.asnumpy(total)
+    heavy = [r for r in t.records if r.op != "d2d_copy"]
+    assert [r.op for r in heavy] == ["gemm"], heavy
+    assert region.report.nodes_eliminated >= 2  # dup matmul + dup tanh
+    ref = 2.0 * np.tanh(_np32(x) @ _np32(w))
+    _assert_close(got, ref, jnp.float32)
+    # the collapsed duplicate carries its representative's value
+    _assert_close(np.asarray(y2), np.tanh(_np32(x) @ _np32(w)), jnp.float32)
+
+
+def test_cse_keeps_distinct_leaves_apart():
+    """Equal-shaped but distinct leaves must NOT collapse (identity-keyed)."""
+    x1, x2, w = _arr(16, 16), _arr(16, 16), _arr(16, 16)
+    got = hnp.asnumpy(hnp.array(x1) @ w + hnp.array(x2) @ w)
+    _assert_close(got, _np32(x1) @ _np32(w) + _np32(x2) @ _np32(w), jnp.float32)
+
+
+def test_block_all_batches_across_roots():
+    """Forcing independent roots in one pass lets same-shape GEMMs batch."""
+    x, w1, w2 = _arr(16, 32), _arr(32, 16), _arr(32, 16)
+    a = hnp.array(x)
+    y1, y2 = a @ w1, a @ w2
+    with offload_policy(mode="device"):
+        with offload_trace() as t:
+            hnp.block_all(y1, y2)
+    assert [r.op for r in t.records if r.op != "d2d_copy"] == ["gemm_batched"]
+    _assert_close(np.asarray(y1), _np32(x) @ _np32(w1), jnp.float32)
+    _assert_close(np.asarray(y2), _np32(x) @ _np32(w2), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # 3. Batching
 # ---------------------------------------------------------------------------
 

@@ -1,6 +1,8 @@
-"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency +
+the registry-closure guard and eager-vs-graph forward parity."""
 
 import dataclasses
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +14,45 @@ from repro.models import build_model
 
 ARCHS = [a for a in list_archs() if a != "paper-gemm"]
 RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Registry closure: the model zoo must dispatch exclusively through
+# registered OffloadOp descriptors — no raw contraction launch sites, no
+# bare engine accounting that the scheduler/cost model/trace cannot see.
+# ---------------------------------------------------------------------------
+
+def test_registry_closure_no_raw_launch_sites_in_models():
+    """Scans src/repro/models/ for the two call-site patterns the seam
+    refactor eliminated — ``*.dot_general(...)`` contractions and bare
+    ``engine().launch(...)`` accounting; any reappearance reopens the seam
+    and fails here (AST-based so docstrings don't trip it)."""
+    import ast
+
+    import repro.models
+
+    root = pathlib.Path(repro.models.__file__).parent
+    offenders = []
+    for f in sorted(root.glob("*.py")):
+        tree = ast.parse(f.read_text())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr == "dot_general":
+                offenders.append((f.name, node.lineno, "dot_general"))
+            if (
+                isinstance(fn, ast.Attribute)
+                and fn.attr == "launch"
+                and isinstance(fn.value, ast.Call)
+                and isinstance(fn.value.func, ast.Name)
+                and fn.value.func.id in ("engine", "_engine")
+            ):
+                offenders.append((f.name, node.lineno, "engine().launch"))
+    assert not offenders, (
+        f"raw launch sites reappeared under src/repro/models/: {offenders}; "
+        "register an OffloadOp descriptor instead (core/blas.py)"
+    )
 
 
 def _batch_for(cfg, b=2, s=16):
@@ -99,6 +140,83 @@ def test_decode_matches_forward(arch):
         np.asarray(logits_fwd[:, -1, :], np.float32),
         rtol=2e-2, atol=2e-2,
     )
+
+
+# ---------------------------------------------------------------------------
+# Eager vs graph forward parity: cfg.forward_mode="graph" lowers each block
+# as an hnp expression graph through the SAME registered descriptors, so the
+# outputs must match within dtype tolerance on every backend — for the
+# attention, SSM, and MoE block families.
+# ---------------------------------------------------------------------------
+
+_GRAPH_PARITY_ARCHS = ("yi-6b", "mamba2-370m", "qwen3-moe-30b-a3b")
+
+_GRAPH_BACKENDS = {
+    "host": dict(mode="host"),
+    "device": dict(mode="device"),
+    "device-pallas-interpret": dict(
+        mode="device", use_pallas=True, interpret=True
+    ),
+}
+
+
+@pytest.mark.parametrize("backend", sorted(_GRAPH_BACKENDS))
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_graph_forward_matches_eager(backend, dtype):
+    from repro.core import engine, offload_policy
+
+    tol = dict(rtol=6e-2, atol=6e-2) if dtype == "bfloat16" else dict(
+        rtol=2e-4, atol=2e-4
+    )
+    for arch in _GRAPH_PARITY_ARCHS:
+        cfg = dataclasses.replace(get_arch(arch).reduced(), dtype=dtype)
+        model = build_model(cfg)
+        params = model.init_params(RNG)
+        batch = _batch_for(cfg)
+        model_g = build_model(dataclasses.replace(cfg, forward_mode="graph"))
+        with offload_policy(**_GRAPH_BACKENDS[backend]):
+            engine().reset()
+            logits, aux = model.forward(params, batch)
+            engine().reset()
+            logits_g, aux_g = model_g.forward(params, batch)
+        np.testing.assert_allclose(
+            np.asarray(logits_g, np.float32), np.asarray(logits, np.float32),
+            err_msg=f"{arch} on {backend}/{dtype}", **tol,
+        )
+        np.testing.assert_allclose(
+            float(aux_g), float(aux), rtol=1e-3, atol=1e-4,
+            err_msg=f"{arch} aux on {backend}/{dtype}",
+        )
+
+
+def test_graph_forward_fuses_and_threads_residency():
+    """The graph forward must actually exploit the graph: at least one
+    fused elementwise epilogue (residual add / gate) per captured block
+    kind, and strictly fewer staged bytes than eager under mode=device."""
+    from repro.core import engine, offload_policy, offload_trace
+    from repro.models import forward as F
+
+    cfg = get_arch("yi-6b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(RNG)
+    batch = _batch_for(cfg)
+    model_g = build_model(dataclasses.replace(cfg, forward_mode="graph"))
+    with offload_policy(mode="device", num_devices=2, scheduler="cost-aware"):
+        engine().reset()
+        with offload_trace() as t_eager:
+            model.forward(params, batch)
+        engine().reset()
+        with F.capture_reports() as reports:
+            with offload_trace() as t_graph:
+                model_g.forward(params, batch)
+    assert reports, "graph forward captured no blocks"
+    fused_launches = sum(
+        1 for rep in reports for launch in rep.launches if launch.fused
+    )
+    assert fused_launches >= 1, "no elementwise epilogue fused"
+    staged_eager = t_eager.total_staged_bytes_charged()
+    staged_graph = t_graph.total_staged_bytes_charged()
+    assert staged_graph < staged_eager, (staged_graph, staged_eager)
 
 
 def test_swa_rolling_cache_bounded():
