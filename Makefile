@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: collect check test bench bench-smoke ci frontend import-time
+.PHONY: collect check test bench bench-smoke bench-gate ci frontend import-time
 
 # Frontend import-time gate: every repro.frontend module (and repro.hnp)
 # must import in <1s cold — the lazy layer stays import-light (no
@@ -30,10 +30,17 @@ bench:
 	PYTHONPATH=src:. $(PYTHON) -m benchmarks.cluster_scaling
 
 # Perf trajectory gate: fast modeled sweeps -> BENCH_offload.json (gemm
-# sweep, cluster scaling, serve makespan pinned vs unpinned, hnp fused
-# graph vs eager chain) + one appended line in BENCH_trajectory.jsonl.
+# sweep, pipelined staging, cluster scaling, serve makespan pinned vs
+# unpinned, hnp fused graph vs eager chain) + one deduped headline line in
+# BENCH_trajectory.jsonl.
 bench-smoke:
 	PYTHONPATH=src:. $(PYTHON) -m benchmarks.run --smoke
 
-# CI entry point: tier-1 suite, then the perf snapshot.
-ci: check bench-smoke
+# Headline assertions over the smoke artifacts: pipelined_speedup >= 1.3,
+# tpu-v5e large-n steady copy_fraction < 0.6, n=2048 offload within 15% of
+# max(copy, compute), trajectory free of duplicate headline lines.
+bench-gate:
+	PYTHONPATH=src:. $(PYTHON) tools/check_bench_gate.py
+
+# CI entry point: tier-1 suite, then the perf snapshot + headline gate.
+ci: check bench-smoke bench-gate

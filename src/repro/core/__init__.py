@@ -23,6 +23,7 @@ from repro.core.accounting import (
 )
 from repro.core.cost_model import (
     OpCost,
+    PipelinedBreakdown,
     RegionBreakdown,
     attention_cost,
     breakdown,
@@ -30,6 +31,9 @@ from repro.core.cost_model import (
     decide_offload,
     gemm_cost,
     gemv_cost,
+    pipeline_makespan,
+    pipelined_breakdown,
+    staging_legs,
     syrk_cost,
 )
 from repro.core import dispatch
@@ -58,6 +62,7 @@ __all__ = [
     "OffloadTrace",
     "offload_trace",
     "OpCost",
+    "PipelinedBreakdown",
     "RegionBreakdown",
     "attention_cost",
     "breakdown",
@@ -65,6 +70,9 @@ __all__ = [
     "decide_offload",
     "gemm_cost",
     "gemv_cost",
+    "pipeline_makespan",
+    "pipelined_breakdown",
+    "staging_legs",
     "syrk_cost",
     "DeviceAggregate",
     "DeviceTimeline",

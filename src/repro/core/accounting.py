@@ -125,6 +125,13 @@ class DeviceTimeline:
     device_id: int
     makespan_s: float
     serial_s: float
+    # Stream occupancy: seconds each engine was busy across the stream.
+    # ``dma_busy_s`` counts host staging + inbound d2d; a fully-resident
+    # launch contributes zero here.  ``makespan_s >= max(dma_busy_s,
+    # compute_busy_s)`` and ``dma_busy_s + compute_busy_s >= serial_s`` need
+    # not hold individually — the two engines run concurrently.
+    dma_busy_s: float = 0.0
+    compute_busy_s: float = 0.0
 
     @property
     def hidden_copy_s(self) -> float:
@@ -269,14 +276,29 @@ class OffloadTrace:
             dma_free = 0.0
             compute_free = 0.0
             serial = 0.0
+            dma_busy = 0.0
+            compute_busy = 0.0
             for r in recs:
                 n = max(int(round(r.count)), 1)
+                # A fully-resident launch stages nothing: its operands
+                # already live in device memory, so it must not occupy the
+                # DMA engine (regression: satellite of ISSUE 6).
+                staging = 0.0 if r.resident_fraction >= 1.0 else r.regions.copy_s
                 # host staging and d2d migration both occupy the DMA engine
-                copy = r.regions.copy_s + r.regions.d2d_s
+                copy = staging + r.regions.d2d_s
                 work = r.regions.fork_join_s + r.regions.compute_s
+                # Chunk-gated start: a pipelined launch's compute may begin
+                # once its *first* staging leg lands (double-buffered DMA);
+                # a monolithic launch waits for the whole copy.
+                first = getattr(r.regions, "first_copy_leg_s", None)
+                chunks = getattr(r.regions, "chunks", 1)
+                gate = (
+                    first if (first is not None and chunks > 1) else staging
+                ) + r.regions.d2d_s
                 # first repeat explicitly...
+                start = dma_free
                 dma_free += copy
-                compute_free = max(dma_free, compute_free) + work
+                compute_free = max(compute_free, start + gate) + work
                 # ...then n-1 identical repeats in closed form: each adds
                 # `copy` to the DMA stream, and the compute stream is
                 # whichever resource is the bottleneck (O(1), not O(n) —
@@ -285,13 +307,18 @@ class OffloadTrace:
                     k = n - 1
                     dma_free += k * copy
                     compute_free = max(
-                        compute_free + k * work, dma_free + work
+                        compute_free + k * work,
+                        dma_free - copy + gate + work,
                     )
-                serial += n * r.regions.offload_s
+                serial += n * (staging + r.regions.d2d_s + work)
+                dma_busy += n * copy
+                compute_busy += n * work
             out[dev] = DeviceTimeline(
                 device_id=dev,
                 makespan_s=max(compute_free, dma_free),
                 serial_s=serial,
+                dma_busy_s=dma_busy,
+                compute_busy_s=compute_busy,
             )
         return out
 

@@ -38,11 +38,13 @@ from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 from repro.core import accounting
 from repro.core.cost_model import (
     OpCost,
+    PipelinedBreakdown,
     RegionBreakdown,
     breakdown,
     d2d_breakdown,
     d2d_cost,
     decide_offload,
+    pipelined_breakdown,
 )
 from repro.core.platform import CPU_HOST, Platform, TPU_V5E, get_platform
 
@@ -105,10 +107,53 @@ class OffloadPolicy:
     use_pallas: bool = False
     # Run Pallas kernels in interpret mode (CPU validation).
     interpret: bool = False
+    # Chunked, double-buffered staging: tile each launch's operand set into
+    # DMA legs that stream in *while* the MXU computes, so offload_s
+    # approaches max(copy, compute) instead of copy + compute.  Scoring,
+    # the auto decision and the cost-aware scheduler all see the pipelined
+    # cost; the overlap timeline shingles the DMA legs under compute.
+    pipeline_staging: bool = True
+    # DMA chunk size override, bytes (None = the platform's natural
+    # double-buffer tile, ``Platform.dma_chunk_bytes``).
+    pipeline_chunk_bytes: Optional[float] = None
+    # Cross-wave prefetch: the graph scheduler may stage wave k+1's leaf
+    # operands while wave k computes (charged as ``prefetch_stage`` records
+    # riding the DMA stream; the consuming launch gets the residency
+    # credit, so no byte is charged twice).
+    prefetch_staging: bool = False
 
     def validate(self) -> None:
         if self.mode not in ("host", "device", "auto"):
             raise ValueError(f"bad offload mode {self.mode!r}")
+
+    def score(
+        self,
+        cost: OpCost,
+        platform: Platform,
+        *,
+        resident_fraction: Optional[float] = None,
+    ) -> RegionBreakdown:
+        """Score one call under this policy: pipelined when staging overlap
+        is on, the paper's serial three-region model otherwise."""
+        rf = (
+            self.resident_fraction
+            if resident_fraction is None
+            else resident_fraction
+        )
+        if self.pipeline_staging:
+            return pipelined_breakdown(
+                cost,
+                platform,
+                chunk_bytes=self.pipeline_chunk_bytes,
+                zero_copy=self.zero_copy,
+                resident_fraction=rf,
+            )
+        return breakdown(
+            cost,
+            platform,
+            zero_copy=self.zero_copy,
+            resident_fraction=rf,
+        )
 
 
 class LaunchResult(str):
@@ -132,11 +177,24 @@ class LaunchResult(str):
 
 @dataclasses.dataclass(frozen=True)
 class LaunchTicket:
-    """One modeled in-flight offload on a device's queue."""
+    """One modeled in-flight offload on a device's queue.
+
+    Tickets are *events*, not just durations: :meth:`VirtualDevice.issue`
+    stamps each one with where it lands on the device's two modeled streams
+    (DMA engine / compute cluster).  ``copy_ready_s`` is when the first
+    staged chunk is on device — with pipelined staging that is one DMA leg
+    after issue, not the whole copy, which is what lets the compute stream
+    start under the remaining transfer.  Queue-depth accounting (serving
+    admission control) reads ``complete_s`` off the in-flight window.
+    """
 
     op: str
     shape_key: str
     offload_s: float
+    issue_s: float = 0.0         # DMA stream start (device clock, seconds)
+    copy_ready_s: float = 0.0    # first operand chunk landed; compute may start
+    copy_done_s: float = 0.0     # staging + d2d stream fully drained
+    complete_s: float = 0.0      # compute retired (launch completion event)
 
 
 class VirtualDevice:
@@ -161,6 +219,10 @@ class VirtualDevice:
         self.inflight: List[LaunchTicket] = []
         self.completed_s = 0.0          # modeled seconds of retired work
         self.completed_launches = 0
+        # Event-driven stream clocks: the frontier of each modeled engine.
+        # ``issue`` advances them per launch; their gap is hidden copy time.
+        self.dma_free_s = 0.0
+        self.compute_free_s = 0.0
 
     # ---- lifecycle (mirrors hero_snitch.c boot / hero_allocator.c) -------
     def boot(self) -> None:
@@ -178,6 +240,8 @@ class VirtualDevice:
         self.inflight.clear()
         self.completed_s = 0.0
         self.completed_launches = 0
+        self.dma_free_s = 0.0
+        self.compute_free_s = 0.0
 
     @property
     def booted(self) -> bool:
@@ -210,17 +274,75 @@ class VirtualDevice:
             self.completed_launches += 1
         self.inflight.append(ticket)
 
+    @property
+    def stream_makespan_s(self) -> float:
+        """Frontier of the later modeled stream (DMA vs compute)."""
+        return max(self.dma_free_s, self.compute_free_s)
+
+    def issue(
+        self, cost: OpCost, bd: RegionBreakdown, shape_key: str
+    ) -> LaunchTicket:
+        """Issue one launch event-wise: charge its staging (plus any d2d
+        leg) to the DMA stream, gate compute on the *first* landed chunk
+        when the breakdown is pipelined (the whole copy otherwise), and
+        enqueue the stamped ticket.  The completion event is what retires
+        through :meth:`retire_all` / cluster ``sync``.
+        """
+        copy = bd.copy_s + bd.d2d_s
+        gate = bd.d2d_s + (
+            bd.first_copy_leg_s
+            if isinstance(bd, PipelinedBreakdown) and bd.chunks > 1
+            else bd.copy_s
+        )
+        work = bd.fork_join_s + bd.compute_s
+        issue_s = self.dma_free_s
+        self.dma_free_s = issue_s + copy
+        ready = issue_s + gate
+        self.compute_free_s = max(self.compute_free_s, ready) + work
+        if isinstance(bd, PipelinedBreakdown):
+            # compute cannot retire before its last chunk has landed
+            self.compute_free_s = max(self.compute_free_s, self.dma_free_s)
+        ticket = LaunchTicket(
+            op=cost.op,
+            shape_key=shape_key,
+            offload_s=bd.offload_s,
+            issue_s=issue_s,
+            copy_ready_s=ready,
+            copy_done_s=self.dma_free_s,
+            complete_s=self.compute_free_s,
+        )
+        self.enqueue(ticket)
+        return ticket
+
+    def requeue(self, ticket: LaunchTicket) -> LaunchTicket:
+        """Re-issue an orphaned ticket on this device (failure/resize
+        rescheduling): its staging was charged where it first ran, so only
+        the modeled completion occupies this device's compute stream."""
+        start = max(self.compute_free_s, self.dma_free_s)
+        self.compute_free_s = start + ticket.offload_s
+        moved = dataclasses.replace(
+            ticket,
+            issue_s=start,
+            copy_ready_s=start,
+            copy_done_s=start,
+            complete_s=self.compute_free_s,
+        )
+        self.enqueue(moved)
+        return moved
+
     def breakdown_for(
         self, cost: OpCost, policy: OffloadPolicy, shape_key: str
     ) -> RegionBreakdown:
         """Score a call on this device with its residency credit applied:
-        operands already resident here never pay the copy region."""
-        return breakdown(
+        operands already resident here never pay the copy region.  Scoring
+        goes through :meth:`OffloadPolicy.score`, so schedulers comparing
+        completion times see the pipelined cost when staging overlap is on.
+        """
+        return policy.score(
             cost,
             self.platform,
-            zero_copy=policy.zero_copy,
             resident_fraction=(
-                1.0 if self.is_resident(shape_key) else policy.resident_fraction
+                1.0 if self.is_resident(shape_key) else None
             ),
         )
 
@@ -378,7 +500,7 @@ class HeroCluster:
             target = self._pick(cost, t.shape_key)
             if not target.booted:
                 target.boot()
-            target.enqueue(t)
+            target.requeue(t)
         return moves
 
     def set_scheduler(self, name: str) -> None:
@@ -523,8 +645,7 @@ class HeroCluster:
             dst.boot()
         dst.mark_resident(handle.name)
         cost = d2d_cost(handle.nbytes)
-        dst.enqueue(LaunchTicket(op=cost.op, shape_key=handle.name,
-                                 offload_s=bd.offload_s))
+        dst.issue(cost, bd, handle.name)
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op, shape_key=handle.name, dtype="",
@@ -567,8 +688,7 @@ class HeroCluster:
         if not dev.booted:
             dev.boot()
         dev.mark_resident(handle.name)
-        dev.enqueue(LaunchTicket(op=cost.op, shape_key=handle.name,
-                                 offload_s=bd.offload_s))
+        dev.issue(cost, bd, handle.name)
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op, shape_key=handle.name, dtype="",
@@ -580,6 +700,45 @@ class HeroCluster:
         )
         handle.device_id = dev.device_id
         return bd
+
+    def prefetch_stage(
+        self, name: str, nbytes: float, device_id: Optional[int] = None
+    ) -> DeviceHandle:
+        """Stage a buffer onto a device *ahead of* the op that consumes it.
+
+        This is the cross-wave half of the DMA pipeline: the graph frontend
+        calls it for wave k+1's unresident operands while wave k's compute
+        is still in flight, so the copy rides the DMA stream under compute
+        instead of serializing in front of the consumer.  The copy is
+        charged on the chosen lane's DMA clock (no fork/join — nothing
+        launches) and the returned handle carries the residency credit the
+        consumer's ``resident_fraction`` math then picks up.
+        """
+        handle = self.pin_handle(name, nbytes, device_id=device_id)
+        dev = self.devices[handle.device_id]
+        cost = OpCost(
+            op="prefetch_stage",
+            flops=0.0,
+            staged_bytes=float(nbytes),
+            touched_bytes=float(nbytes),
+        )
+        bd = RegionBreakdown(
+            copy_s=self.platform.t_copy(nbytes, zero_copy=self.policy.zero_copy),
+            fork_join_s=0.0,
+            compute_s=0.0,
+            host_s=0.0,
+        )
+        dev.issue(cost, bd, name)
+        accounting.record(
+            accounting.OffloadRecord(
+                op=cost.op, shape_key=name, dtype="",
+                backend="device", cost=cost, regions=bd,
+                zero_copy=self.policy.zero_copy,
+                note="cross-wave prefetch",
+                device_id=dev.device_id,
+            )
+        )
+        return handle
 
     @contextlib.contextmanager
     def handle_scope(self) -> Iterator[None]:
@@ -622,7 +781,7 @@ class HeroCluster:
             target = self._select(survivors, cost, self.policy, t.shape_key)
             if not target.booted:
                 target.boot()
-            target.enqueue(t)
+            target.requeue(t)
             moved.append((t, target.device_id))
         return moved
 
@@ -692,9 +851,7 @@ class HeroCluster:
         if not dev.booted:
             dev.boot()
         bd = dev.breakdown_for(cost, self.policy, key)
-        dev.enqueue(
-            LaunchTicket(op=cost.op, shape_key=key, offload_s=bd.offload_s)
-        )
+        dev.issue(cost, bd, key)
         return dev.device_id, bd
 
     # ---- modeled completion ----------------------------------------------
@@ -742,12 +899,7 @@ class HeroCluster:
             else min(max(float(resident_fraction), 0.0), 1.0)
         )
         if force_host:  # ops compiled host-only (paper: syrk.c)
-            bd = breakdown(
-                cost,
-                self.platform,
-                zero_copy=pol.zero_copy,
-                resident_fraction=rf,
-            )
+            bd = pol.score(cost, self.platform, resident_fraction=rf)
             accounting.record(
                 accounting.OffloadRecord(
                     op=cost.op, shape_key=shape_key, dtype=dtype,
@@ -759,20 +911,10 @@ class HeroCluster:
             return LaunchResult("host")
         if pol.mode == "host":
             offload = False
-            bd = breakdown(
-                cost,
-                self.platform,
-                zero_copy=pol.zero_copy,
-                resident_fraction=rf,
-            )
+            bd = pol.score(cost, self.platform, resident_fraction=rf)
         elif pol.mode == "device":
             offload = True
-            bd = breakdown(
-                cost,
-                self.platform,
-                zero_copy=pol.zero_copy,
-                resident_fraction=rf,
-            )
+            bd = pol.score(cost, self.platform, resident_fraction=rf)
         else:  # auto — the paper's size-dependent decision
             offload, bd = decide_offload(
                 cost,
@@ -780,6 +922,8 @@ class HeroCluster:
                 zero_copy=pol.zero_copy,
                 resident_fraction=rf,
                 min_speedup=pol.min_speedup,
+                pipeline=pol.pipeline_staging,
+                chunk_bytes=pol.pipeline_chunk_bytes,
             )
 
         device_id = HOST_DEVICE_ID
@@ -793,10 +937,7 @@ class HeroCluster:
             if resident_fraction is None and dev.is_resident(key):
                 bd = dev.breakdown_for(cost, pol, key)
                 rf = 1.0
-            dev.enqueue(
-                LaunchTicket(op=cost.op, shape_key=key,
-                             offload_s=bd.offload_s)
-            )
+            dev.issue(cost, bd, key)
 
         if not offload:
             backend = "host"
@@ -854,6 +995,9 @@ class offload_policy:
         interpret: Optional[bool] = None,
         num_devices: Optional[int] = None,
         scheduler: Optional[str] = None,
+        pipeline_staging: Optional[bool] = None,
+        pipeline_chunk_bytes: Optional[float] = None,
+        prefetch_staging: Optional[bool] = None,
     ) -> None:
         self._overrides = {
             k: v
@@ -864,6 +1008,9 @@ class offload_policy:
                 resident_fraction=resident_fraction,
                 use_pallas=use_pallas,
                 interpret=interpret,
+                pipeline_staging=pipeline_staging,
+                pipeline_chunk_bytes=pipeline_chunk_bytes,
+                prefetch_staging=prefetch_staging,
             ).items()
             if v is not None
         }

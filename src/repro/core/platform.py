@@ -85,6 +85,12 @@ class Platform:
     # PMCAs).  0 means "fall back": ICI if present, else staging through the
     # host at copy_bw (the heSoC has no direct PMCA-to-PMCA path).
     d2d_bw: float = 0.0
+    # Natural DMA staging-chunk size for double-buffered (pipelined) h2d
+    # transfers, bytes.  Half the local scratch is the classic bound (one
+    # buffer computes while the other refills); 0 disables chunked staging
+    # (single-chunk transfers — e.g. the CPU "device" shares the host
+    # address space, there is nothing to overlap).
+    dma_chunk_bytes: int = 0
 
     # ---- region models -------------------------------------------------
     def t_host(self, flops: float) -> float:
@@ -148,6 +154,7 @@ HESOC_VCU128 = Platform(
     fork_join_s=_T_FORK,
     local_mem_bytes=128 * 1024,                  # 128 KiB SPM
     zero_copy_speedup=7.5,
+    dma_chunk_bytes=64 * 1024,                   # SPM/2 double-buffer halves
 )
 
 # --------------------------------------------------------------------------
@@ -164,6 +171,7 @@ TPU_V5E = Platform(
     ici_bw=50.0e9,                # per link
     zero_copy_speedup=1.0e9,      # resident buffers: staging cost ~ 0
     d2d_bw=50.0e9,                # cache migration rides the ICI
+    dma_chunk_bytes=4 * 1024 * 1024,   # Pallas-pipeline tile granularity
 )
 
 # CPU host-only platform (this container) — used for interpret-mode runs.

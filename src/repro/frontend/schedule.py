@@ -81,6 +81,11 @@ class GraphReport:
     # Nodes removed before scheduling: duplicate subtrees collapsed by
     # common-subexpression elimination plus the dead nodes only they fed.
     nodes_eliminated: int = 0
+    # Bytes staged ahead of their consumer by cross-wave prefetch: wave k+1
+    # operand copies issued while wave k computes, riding the DMA stream
+    # under compute.  Not part of ``staged_bytes`` — the consumer's launch
+    # takes the residency credit instead of paying the copy region.
+    prefetched_bytes: float = 0.0
 
     @property
     def staged_in_bytes(self) -> float:
@@ -103,7 +108,7 @@ class GraphReport:
         return sum(1 for r in self.launches if r.batched)
 
     def summary(self) -> str:
-        return (
+        s = (
             f"graph {self.name!r}: {len(self.launches)} launches, "
             f"{self.fused_ops} fused elementwise ops, "
             f"{self.batched_launches} batched GEMMs, "
@@ -111,6 +116,9 @@ class GraphReport:
             f"staged_in={self.staged_in_bytes:.0f}B "
             f"readback={self.readback_bytes:.0f}B"
         )
+        if self.prefetched_bytes > 0:
+            s += f" prefetched={self.prefetched_bytes:.0f}B"
+        return s
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +161,21 @@ class GraphRegion:
         )
         self.residency[node.id] = h
         self.owned.add(h.name)
+
+    def prefetch(self, node: Node, device_id: int) -> None:
+        """Stage an evaluated operand onto ``device_id`` ahead of its
+        consumer (cross-wave DMA prefetch).  The copy is charged now — on
+        the lane's DMA stream, under the current wave's compute — and the
+        owned handle carries the residency credit the consumer's launch
+        picks up."""
+        from repro.core.hero import engine
+
+        h = engine().prefetch_stage(
+            f"{self.name}:n{node.id}", node.nbytes, device_id=device_id
+        )
+        self.residency[node.id] = h
+        self.owned.add(h.name)
+        self.report.prefetched_bytes += node.nbytes
 
     def release(self) -> None:
         from repro.core.hero import engine
@@ -616,6 +639,44 @@ def evaluate_many(roots: Sequence[Node]):
     return [r.value for r in roots]
 
 
+def _prefetch_next_wave(
+    next_ids: List[int], by_id: Dict[int, Node], region: GraphRegion
+) -> None:
+    """Issue wave k+1's staging while wave k's compute is still in flight.
+
+    For each heavy node in the upcoming wave that already has a device
+    affinity (some operand resident on a lane), stage its *other* evaluated,
+    unresident array operands onto that lane now.  The copies land on the
+    DMA stream behind the current wave's launches — i.e. under compute —
+    and the consumer's ``resident_fraction`` then credits them.  Opt-in via
+    ``OffloadPolicy.prefetch_staging``.
+    """
+    from repro.core.hero import engine
+
+    eng = engine()
+    pol = eng.policy
+    if not pol.prefetch_staging or pol.mode == "host":
+        return
+    for nid in sorted(next_ids):
+        n = by_id.get(nid)
+        if n is None or n.evaluated or not is_heavy(n.op):
+            continue
+        dev = None
+        for inp in _array_inputs(n):
+            h = region.handle_for(inp)
+            if h is not None:
+                dev = h.device_id
+                break
+        if dev is None:
+            continue  # no affinity yet — placement unknown, don't guess
+        for inp in _array_inputs(n):
+            if not inp.evaluated or inp.nbytes <= 0:
+                continue  # in-flight intermediates ride residency threading
+            if region.handle_for(inp) is not None:
+                continue  # already device-resident
+            region.prefetch(inp, dev)
+
+
 def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
     order = _collect(roots)
     if not order:
@@ -683,6 +744,10 @@ def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
                 _run_batched(members, chains, root_ids, region)
                 for n in members:
                     complete(n, ready)
+        # wave k just dispatched; `ready` is wave k+1 — issue its staging
+        # now so the copies shingle under wave k's modeled compute
+        if ready:
+            _prefetch_next_wave(ready, by_id, region)
 
     leftover = [n for n in order if n.id not in done and not n.evaluated]
     if leftover:  # cycles cannot happen by construction; guard anyway

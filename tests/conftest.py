@@ -87,6 +87,20 @@ except ImportError:
     def _just(value):
         return _Strategy(lambda rng, i: value)
 
+    def _lists(elements, min_size=0, max_size=10):
+        lo, hi = int(min_size), int(max_size)
+
+        def sample(rng, i):
+            if i == 0:
+                size = lo
+            elif i == 1:
+                size = hi
+            else:
+                size = rng.randint(lo, hi)
+            return [elements.example_at(rng, i) for _ in range(size)]
+
+        return _Strategy(sample)
+
     def _settings(**kw):
         def deco(fn):
             fn._shim_settings = dict(getattr(fn, "_shim_settings", {}), **kw)
@@ -155,6 +169,7 @@ except ImportError:
     _st.sampled_from = _sampled_from
     _st.booleans = _booleans
     _st.just = _just
+    _st.lists = _lists
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st

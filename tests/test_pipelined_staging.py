@@ -1,0 +1,467 @@
+"""Chunked double-buffered staging: cost model, accounting, prefetch, bench.
+
+The overlap contracts of ISSUE 6:
+
+1. **Makespan bounds** — any pipelined makespan lies in
+   ``[max(copy, compute), copy + compute]`` and is monotone (non-increasing)
+   in chunk count.
+2. **Degenerate safety** — staged bytes not divisible by the chunk tile,
+   1-chunk ops and zero-staging ops produce no division-by-zero, NaN, or
+   negative ``copy_fraction``.
+3. **Accounting** — ``device_timelines()`` gates compute on the *first*
+   staging leg of a pipelined launch (the DMA shingles under compute), a
+   fully-resident launch occupies the DMA engine for exactly zero seconds,
+   and ``migrate_handle``'s d2d charge lands in one DMA window only.
+4. **Frontend prefetch** — with ``prefetch_staging`` on, wave k+1's leaf
+   operands stage while wave k computes, and the consumer takes the
+   residency credit.
+"""
+
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    HESOC_VCU128,
+    TPU_V5E,
+    OpCost,
+    breakdown,
+    engine,
+    gemm_cost,
+    offload_policy,
+    offload_trace,
+    pipeline_makespan,
+    pipelined_breakdown,
+    staging_legs,
+)
+from repro.core.accounting import OffloadRecord
+from repro.core.cost_model import MAX_PIPELINE_CHUNKS, RegionBreakdown
+
+EPS = 1e-12
+
+
+@pytest.fixture(autouse=True)
+def _reset_engine():
+    engine().reset()
+    yield
+    engine().reset()
+
+
+def _cost(staged, flops=1e6, touched=None):
+    return OpCost(
+        op="gemm",
+        flops=flops,
+        staged_bytes=staged,
+        touched_bytes=staged if touched is None else touched,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. Makespan bounds + monotonicity (hypothesis sweeps)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(
+    staged=st.floats(min_value=1.0, max_value=1e9),
+    flops=st.floats(min_value=1.0, max_value=1e13),
+    chunks=st.integers(min_value=1, max_value=128),
+)
+def test_pipelined_makespan_within_bounds(staged, flops, chunks):
+    for plat in (HESOC_VCU128, TPU_V5E):
+        bd = pipelined_breakdown(_cost(staged, flops), plat, chunks=chunks)
+        lo = max(bd.copy_s, bd.compute_s)
+        hi = bd.copy_s + bd.compute_s
+        assert lo - EPS <= bd.overlapped_s <= hi + EPS
+        assert bd.offload_s <= bd.serial_s + EPS
+        assert bd.pipelined_speedup >= 1.0 - EPS
+
+
+@settings(max_examples=25)
+@given(
+    staged=st.floats(min_value=1.0, max_value=1e9),
+    flops=st.floats(min_value=1.0, max_value=1e13),
+)
+def test_pipelined_makespan_monotone_in_chunks(staged, flops):
+    """Doubling the chunk count never makes the modeled schedule worse."""
+    for plat in (HESOC_VCU128, TPU_V5E):
+        prev = None
+        for k in (1, 2, 4, 8, 16, 32, 64):
+            bd = pipelined_breakdown(_cost(staged, flops), plat, chunks=k)
+            if prev is not None:
+                assert bd.overlapped_s <= prev + EPS
+            prev = bd.overlapped_s
+
+
+@settings(max_examples=40)
+@given(
+    legs=st.lists(
+        st.floats(min_value=0.0, max_value=10.0), min_size=1, max_size=20
+    ),
+    work=st.lists(
+        st.floats(min_value=0.0, max_value=10.0), min_size=1, max_size=20
+    ),
+    buffers=st.integers(min_value=1, max_value=4),
+)
+def test_pipeline_makespan_raw_bounds(legs, work, buffers):
+    """The leg-level simulator honors the bounds for *unequal* legs too."""
+    k = min(len(legs), len(work))
+    legs, work = legs[:k], work[:k]
+    span = pipeline_makespan(legs, work, buffers=buffers)
+    assert max(sum(legs), sum(work)) - EPS <= span
+    assert span <= sum(legs) + sum(work) + EPS
+
+
+# ---------------------------------------------------------------------------
+# 2. Degenerate chunk math (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_staging_legs_remainder_and_cap():
+    # not divisible: full legs + one remainder, summing exactly
+    legs = staging_legs(10_000.0, 4096.0)
+    assert len(legs) == 3
+    assert legs[:2] == (4096.0, 4096.0)
+    assert abs(sum(legs) - 10_000.0) < EPS
+    # degenerate: zero bytes, zero/None/oversized chunk -> one leg
+    assert staging_legs(0.0, 4096.0) == (0.0,)
+    assert staging_legs(100.0, 0.0) == (100.0,)
+    assert staging_legs(100.0, None) == (100.0,)
+    assert staging_legs(100.0, 200.0) == (100.0,)
+    # tiny tile: capped at MAX_PIPELINE_CHUNKS equal legs, sum preserved
+    legs = staging_legs(1e9, 1.0)
+    assert len(legs) == MAX_PIPELINE_CHUNKS
+    assert abs(sum(legs) - 1e9) < 1.0
+
+
+@settings(max_examples=40)
+@given(
+    staged=st.floats(min_value=0.0, max_value=1e9),
+    chunk=st.floats(min_value=0.0, max_value=1e8),
+)
+def test_staging_legs_always_sum_and_positive(staged, chunk):
+    legs = staging_legs(staged, chunk)
+    assert all(b >= 0.0 for b in legs)
+    assert abs(sum(legs) - max(staged, 0.0)) <= max(staged, 1.0) * 1e-9
+
+
+def test_one_chunk_degenerate_matches_serial():
+    """A single-chunk pipeline cannot overlap anything: serial numbers."""
+    cost = _cost(1000.0, flops=1e7)
+    for plat in (HESOC_VCU128, TPU_V5E):
+        p = pipelined_breakdown(cost, plat, chunks=1)
+        s = breakdown(cost, plat)
+        assert p.chunks == 1
+        assert p.offload_s == pytest.approx(s.offload_s)
+        assert 0.0 <= p.copy_fraction <= 1.0
+
+
+def test_zero_staged_bytes_no_nan():
+    """Fully-resident (or zero-operand) launches: no division hazards."""
+    cost = _cost(0.0, flops=1e9, touched=1e6)
+    for plat in (HESOC_VCU128, TPU_V5E):
+        for rf in (0.0, 1.0):
+            p = pipelined_breakdown(cost, plat, resident_fraction=rf)
+            assert p.copy_s == 0.0
+            assert p.copy_fraction == 0.0
+            assert p.offload_s == pytest.approx(
+                plat.t_fork_join() + p.overlapped_s
+            )
+            assert p.overlapped_s == pytest.approx(p.compute_s)
+
+
+@settings(max_examples=40)
+@given(
+    staged=st.floats(min_value=0.0, max_value=1e9),
+    flops=st.floats(min_value=0.0, max_value=1e13),
+    rf=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_copy_fraction_never_negative(staged, flops, rf):
+    for plat in (HESOC_VCU128, TPU_V5E):
+        p = pipelined_breakdown(
+            _cost(staged, flops), plat, resident_fraction=rf
+        )
+        assert 0.0 <= p.copy_fraction <= 1.0 + EPS
+        assert p.exposed_copy_s >= 0.0
+        assert p.hidden_copy_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# 3. Accounting: chunk gating, zero-DMA residency, d2d single-count
+# ---------------------------------------------------------------------------
+
+def _record(regions, *, op="gemm", rf=0.0, device_id=0, count=1.0):
+    return OffloadRecord(
+        op=op, shape_key="k", dtype="float32", backend="device",
+        cost=_cost(regions.copy_s), regions=regions, zero_copy=False,
+        device_id=device_id, resident_fraction=rf, count=count,
+    )
+
+
+def test_fully_resident_launch_zero_dma_occupancy():
+    """Regression (ISSUE 6 satellite): resident_fraction=1.0 must not
+    occupy the DMA engine even if the record carries a copy region."""
+    from repro.core import offload_trace
+
+    with offload_trace() as t:
+        t.add(_record(
+            RegionBreakdown(copy_s=5.0, fork_join_s=0.5, compute_s=2.0,
+                            host_s=0.0),
+            rf=1.0,
+        ))
+    tl = t.device_timelines()[0]
+    assert tl.dma_busy_s == 0.0
+    assert tl.makespan_s == pytest.approx(2.5)
+    assert tl.serial_s == pytest.approx(2.5)
+
+
+def test_timeline_gates_compute_on_first_chunk_leg():
+    """A pipelined launch's compute starts after ONE staging leg, not the
+    whole copy: the makespan beats the serial schedule by the hidden legs."""
+    from repro.core import offload_trace
+
+    cost = gemm_cost(128, 128, 128, 8)
+    p = pipelined_breakdown(cost, HESOC_VCU128)
+    assert p.chunks > 1
+    with offload_trace() as t:
+        t.add(_record(p))
+    tl = t.device_timelines()[0]
+    work = p.fork_join_s + p.compute_s
+    assert tl.makespan_s == pytest.approx(
+        max(p.copy_s, p.first_copy_leg_s + work)
+    )
+    assert tl.makespan_s < p.copy_s + work - EPS  # genuinely shingled
+    assert tl.serial_s == pytest.approx(p.copy_s + work)
+    assert tl.dma_busy_s == pytest.approx(p.copy_s)
+    assert tl.compute_busy_s == pytest.approx(work)
+
+
+def test_timeline_repeat_counts_keep_bounds():
+    from repro.core import offload_trace
+
+    cost = gemm_cost(128, 128, 128, 8)
+    p = pipelined_breakdown(cost, HESOC_VCU128)
+    with offload_trace() as t:
+        t.add(_record(p, count=7.0))
+    tl = t.device_timelines()[0]
+    work = p.fork_join_s + p.compute_s
+    assert tl.dma_busy_s == pytest.approx(7 * p.copy_s)
+    assert tl.compute_busy_s == pytest.approx(7 * work)
+    assert max(tl.dma_busy_s, tl.compute_busy_s) <= tl.makespan_s + EPS
+    assert tl.makespan_s <= tl.serial_s + EPS
+
+
+def test_migrate_d2d_not_double_counted_in_dma_window():
+    """migrate_handle charges the destination DMA stream exactly once: the
+    timeline's DMA occupancy equals staging + d2d summed over records, and
+    adding the migration moves the makespan by at most its d2d time."""
+    with offload_policy(
+        mode="device", platform="hesoc-vcu128", num_devices=2,
+        scheduler="cost-aware",
+    ) as eng:
+        cost = gemm_cost(128, 128, 128, 8)
+        with offload_trace() as t:
+            h = eng.pin_handle("kv", 65536.0, device_id=1)
+            eng.launch(cost, dtype="float64", shape_key="gemm:128")
+            before = t.device_timelines()
+            eng.migrate_handle(h, 0)
+            after = t.device_timelines()
+    recs = [r for r in t.offloaded() if r.device_id == 0]
+    d2d_total = sum(r.regions.d2d_s for r in recs)
+    staging_total = sum(
+        0.0 if r.resident_fraction >= 1.0 else r.regions.copy_s for r in recs
+    )
+    tl = after[0]
+    assert tl.dma_busy_s == pytest.approx(staging_total + d2d_total)
+    # exactly one d2d record, charged once
+    d2d_recs = [r for r in recs if r.op == "d2d_copy"]
+    assert len(d2d_recs) == 1
+    assert d2d_total == pytest.approx(d2d_recs[0].regions.d2d_s)
+    assert tl.makespan_s <= before[0].makespan_s + d2d_recs[0].regions.offload_s + EPS
+
+
+def test_issue_advances_stream_clocks():
+    """The event-driven launch path stamps the device stream clocks."""
+    with offload_policy(
+        mode="device", platform="hesoc-vcu128", num_devices=1,
+    ) as eng:
+        cost = gemm_cost(128, 128, 128, 8)
+        res = eng.launch(cost, dtype="float64", shape_key="gemm:128")
+        dev = eng.devices[res.device_id]
+        p = pipelined_breakdown(cost, eng.platform)
+        assert dev.dma_free_s == pytest.approx(p.copy_s)
+        assert dev.compute_free_s == pytest.approx(
+            p.first_copy_leg_s + p.fork_join_s + p.compute_s
+        )
+        assert dev.stream_makespan_s < p.copy_s + p.fork_join_s + p.compute_s
+        t = dev.inflight[-1]
+        assert t.complete_s == pytest.approx(dev.compute_free_s)
+        assert t.copy_done_s == pytest.approx(dev.dma_free_s)
+
+
+# ---------------------------------------------------------------------------
+# 4. Acceptance + policy wiring
+# ---------------------------------------------------------------------------
+
+def test_tpu_n2048_offload_within_15pct_of_max():
+    cost = gemm_cost(2048, 2048, 2048, 4)
+    p = pipelined_breakdown(cost, TPU_V5E)
+    assert p.offload_s <= 1.15 * max(p.copy_s, p.compute_s)
+
+
+def test_paper_crossover_pipelined_speedup():
+    """heSoC n=128 float64 — the paper's balanced copy/compute regime —
+    gains >= 1.5x from double-buffered staging (ROADMAP open item 2)."""
+    cost = gemm_cost(128, 128, 128, 8)
+    p = pipelined_breakdown(cost, HESOC_VCU128)
+    assert p.pipelined_speedup >= 1.5
+
+
+def test_policy_pipeline_staging_off_restores_serial():
+    cost = gemm_cost(128, 128, 128, 8)
+    with offload_policy(
+        mode="device", platform="hesoc-vcu128", pipeline_staging=False,
+    ) as eng:
+        with offload_trace() as t:
+            eng.launch(cost, dtype="float64", shape_key="gemm:128")
+    serial = breakdown(cost, HESOC_VCU128)
+    assert t.records[0].regions.offload_s == pytest.approx(serial.offload_s)
+
+
+def test_dispatch_sees_pipelined_cost():
+    cost = gemm_cost(128, 128, 128, 8)
+    with offload_policy(mode="device", platform="hesoc-vcu128") as eng:
+        with offload_trace() as t:
+            eng.launch(cost, dtype="float64", shape_key="gemm:128")
+    rec = t.records[0]
+    pipelined = pipelined_breakdown(cost, HESOC_VCU128)
+    assert rec.regions.offload_s == pytest.approx(pipelined.offload_s)
+    assert rec.regions.offload_s < breakdown(cost, HESOC_VCU128).offload_s
+
+
+# ---------------------------------------------------------------------------
+# 5. Frontend cross-wave prefetch
+# ---------------------------------------------------------------------------
+
+def test_prefetch_stages_next_wave_operands():
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.hnp as hnp
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+
+    with offload_policy(
+        mode="device", num_devices=2, scheduler="cost-aware",
+        prefetch_staging=True,
+    ):
+        with offload_trace() as t:
+            with hnp.offload_region("prefetch-chain") as region:
+                h = hnp.array(x) @ w0
+                out = hnp.asnumpy(h @ w1)
+    pf = [r for r in t.records if r.op == "prefetch_stage"]
+    assert pf, "prefetch_staging should issue prefetch_stage records"
+    assert region.report.prefetched_bytes >= w1.nbytes
+    # the consumer took the residency credit for the prefetched operand
+    consumer = region.report.launches[-1]
+    assert consumer.resident_fraction > 0.5
+    assert consumer.staged_in_bytes < w1.nbytes
+    # value parity: prefetch is a scheduling hint, not a numeric change
+    want = np.asarray(x) @ np.asarray(w0) @ np.asarray(w1)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_prefetch_off_by_default_no_records():
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.hnp as hnp
+
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    with offload_policy(mode="device", num_devices=2):
+        with offload_trace() as t:
+            hnp.asnumpy(hnp.array(x) @ w @ w)
+    assert not [r for r in t.records if r.op == "prefetch_stage"]
+
+
+# ---------------------------------------------------------------------------
+# 6. Trajectory dedupe + ci_run (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def _fake_summary(**over):
+    base = {
+        "cluster_scaling": {"cost-aware_scaling_8dev": 7.0},
+        "serve_makespan": {"pinned_speedup": 3.5},
+        "frontend_graph": {
+            "modeled_speedup": 1.4, "staging_bytes_saved": 1000.0,
+        },
+        "model_forward": {
+            "modeled_speedup": 1.05, "staging_bytes_saved": 500.0,
+            "fused_launches": 1,
+        },
+        "pipelined_staging": {
+            "paper_crossover": {"pipelined_speedup": 1.56},
+            "tpu_large_n_steady": {"pipelined_copy_fraction": 0.34},
+            "tpu_n2048": {"pipelined_vs_max": 1.01},
+        },
+        "elapsed_s": 1.0,
+    }
+    base.update(over)
+    return base
+
+
+def test_trajectory_dedupes_same_commit_same_headline(tmp_path, monkeypatch):
+    from benchmarks.run import _append_trajectory
+
+    monkeypatch.setenv("GITHUB_SHA", "deadbee")
+    path = str(tmp_path / "traj.jsonl")
+    _append_trajectory(_fake_summary(), path)
+    # identical headline, different elapsed_s -> still one line
+    _append_trajectory(_fake_summary(elapsed_s=2.0), path)
+    lines = [json.loads(l) for l in open(path) if l.strip()]
+    assert len(lines) == 1
+    # a changed modeled number is a new point on the trajectory
+    changed = _fake_summary()
+    changed["serve_makespan"] = {"pinned_speedup": 9.9}
+    _append_trajectory(changed, path)
+    lines = [json.loads(l) for l in open(path) if l.strip()]
+    assert len(lines) == 2
+
+
+def test_trajectory_compacts_preexisting_duplicates(tmp_path, monkeypatch):
+    from benchmarks.run import _append_trajectory, _headline_hash
+
+    monkeypatch.setenv("GITHUB_SHA", "deadbee")
+    path = str(tmp_path / "traj.jsonl")
+    dup = {"commit": "0ldc0de", "timestamp": "t", "ci_run": "",
+           "headline": {"x": 1.0, "elapsed_s": 5.0}}
+    with open(path, "w") as f:
+        f.write(json.dumps(dup) + "\n")
+        dup2 = dict(dup, headline={"x": 1.0, "elapsed_s": 9.0})
+        f.write(json.dumps(dup2) + "\n")
+    assert _headline_hash(dup["headline"]) == _headline_hash(dup2["headline"])
+    _append_trajectory(_fake_summary(), path)
+    lines = [json.loads(l) for l in open(path) if l.strip()]
+    assert len(lines) == 2  # compacted duplicate + the new entry
+    assert lines[0]["commit"] == "0ldc0de"
+
+
+def test_trajectory_ci_run_populated_from_env(tmp_path, monkeypatch):
+    from benchmarks.run import _append_trajectory
+
+    monkeypatch.setenv("GITHUB_SHA", "deadbee")
+    path = str(tmp_path / "traj.jsonl")
+    monkeypatch.delenv("GITHUB_RUN_ID", raising=False)
+    monkeypatch.setenv("CI_RUN_ID", "run-42")
+    entry = _append_trajectory(_fake_summary(), path)
+    assert entry["ci_run"] == "run-42"
+    monkeypatch.setenv("GITHUB_RUN_ID", "gha-7")
+    changed = _fake_summary()
+    changed["serve_makespan"] = {"pinned_speedup": 8.8}
+    entry = _append_trajectory(changed, path)
+    assert entry["ci_run"] == "gha-7"

@@ -1,0 +1,123 @@
+"""Bench-smoke perf gate — the headline numbers can't silently regress.
+
+Reads the artifacts ``benchmarks.run --smoke`` just wrote and asserts the
+pipelined-staging headline (ISSUE 6):
+
+* ``pipelined_speedup >= 1.3`` at the paper-crossover regime (heSoC n=128
+  float64, where T_copy ~ T_compute — the overlap win ROADMAP item 2 claims);
+* tpu-v5e large-n steady-state ``copy_fraction < 0.6`` (serial staging
+  spends 0.60 of offload time copying there; the pipeline must hide it);
+* tpu-v5e n=2048 cold ``offload_s`` within 15% of ``max(copy, compute)``
+  (the acceptance criterion: a shingle, not a sum);
+* ``BENCH_trajectory.jsonl`` has no duplicate (commit, headline-hash) lines.
+
+Run: PYTHONPATH=src:. python tools/check_bench_gate.py [--offload PATH]
+     [--trajectory PATH]
+
+Exit code 0 = gate holds; 1 = regression (each failure printed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_offload(summary: dict) -> list:
+    failures = []
+    pipe = summary.get("pipelined_staging")
+    if not pipe:
+        return ["BENCH_offload.json has no pipelined_staging section"]
+
+    crossover = pipe["paper_crossover"]
+    if crossover["pipelined_speedup"] < 1.3:
+        failures.append(
+            "paper-crossover pipelined_speedup "
+            f"{crossover['pipelined_speedup']:.3f} < 1.3"
+        )
+
+    steady = pipe["tpu_large_n_steady"]
+    if steady["pipelined_copy_fraction"] >= 0.6:
+        failures.append(
+            "tpu-v5e large-n steady pipelined copy_fraction "
+            f"{steady['pipelined_copy_fraction']:.3f} >= 0.6"
+        )
+
+    n2048 = pipe["tpu_n2048"]
+    if n2048["pipelined_vs_max"] > 1.15:
+        failures.append(
+            "tpu-v5e n=2048 pipelined offload_s is "
+            f"{n2048['pipelined_vs_max']:.3f}x max(copy, compute) > 1.15x"
+        )
+    return failures
+
+
+def check_trajectory(path: str) -> list:
+    # Mirror benchmarks.run's dedupe key so the two stay in lockstep.
+    from benchmarks.run import _headline_hash
+
+    seen = set()
+    failures = []
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f if ln.strip()]
+    except OSError as e:
+        return [f"cannot read {path}: {e}"]
+    if not lines:
+        return [f"{path} is empty — bench-smoke did not record a headline"]
+    for i, line in enumerate(lines, 1):
+        try:
+            e = json.loads(line)
+        except ValueError:
+            failures.append(f"{path}:{i}: not valid JSON")
+            continue
+        key = (e.get("commit", ""), _headline_hash(e.get("headline", {})))
+        if key in seen:
+            failures.append(
+                f"{path}:{i}: duplicate headline for commit {key[0]!r}"
+            )
+        seen.add(key)
+    last = json.loads(lines[-1])
+    if "pipelined_speedup" not in last.get("headline", {}):
+        failures.append(
+            f"{path}: latest headline is missing 'pipelined_speedup'"
+        )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--offload", default="BENCH_offload.json")
+    ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
+    args = ap.parse_args()
+
+    try:
+        with open(args.offload) as f:
+            summary = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot load {args.offload}: {e}")
+        return 1
+
+    failures = check_offload(summary) + check_trajectory(args.trajectory)
+    if failures:
+        print("bench gate FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+
+    pipe = summary["pipelined_staging"]
+    print(
+        "bench gate ok: pipelined_speedup="
+        f"{pipe['paper_crossover']['pipelined_speedup']:.2f}x (>=1.3), "
+        "tpu steady copy_fraction="
+        f"{pipe['tpu_large_n_steady']['pipelined_copy_fraction']:.2f} (<0.6), "
+        "n=2048 vs max(copy,compute)="
+        f"{pipe['tpu_n2048']['pipelined_vs_max']:.3f}x (<=1.15), "
+        "trajectory deduped"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
