@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: collect check test bench bench-smoke bench-gate ci frontend import-time
+.PHONY: collect check test bench bench-smoke bench-gate ci frontend import-time lint
 
 # Frontend import-time gate: every repro.frontend module (and repro.hnp)
 # must import in <1s cold — the lazy layer stays import-light (no
@@ -20,6 +20,13 @@ check: collect
 	$(PYTHON) -m pytest -x -q
 
 test: check
+
+# Static-analysis gate (repro.analysis): the AST lint rules + registry
+# closure over src/, then the graph verifier + stream race detector over a
+# smoke hnp workload (validate=True region on a 4-device modeled cluster).
+lint:
+	$(PYTHON) tools/repro_lint.py
+	$(PYTHON) tools/repro_lint.py --smoke-races
 
 # The hnp graph-frontend suite in isolation (parity, fusion, batching,
 # residency threading) — the fast loop while working on repro/frontend.
@@ -42,5 +49,6 @@ bench-smoke:
 bench-gate:
 	PYTHONPATH=src:. $(PYTHON) tools/check_bench_gate.py
 
-# CI entry point: tier-1 suite, then the perf snapshot + headline gate.
-ci: check bench-smoke bench-gate
+# CI entry point: tier-1 suite, the static-analysis gate, then the perf
+# snapshot + headline gate.
+ci: check lint bench-smoke bench-gate

@@ -89,6 +89,41 @@ def main() -> None:
     print(f"pallas gemm max err vs numpy: {np.max(np.abs(y3 - ref)):.2e}")
 
     # -----------------------------------------------------------------------
+    # Static analysis: proving the seam instead of trusting it.
+    #
+    # `repro.analysis` checks the three layers the offload story rides on.
+    # `hnp.offload_region(..., validate=True)` runs the graph verifier over
+    # every graph forced inside the region *before dispatch*: node shapes
+    # and dtypes re-derived against the registry host lowerings, residency
+    # handle lifetimes, and wave-schedule RAW/WAR hazards — each break is a
+    # named violation (graph/shape-mismatch, graph/use-after-unstage, ...).
+    # The race detector then replays the LaunchTicket event streams the
+    # modeled devices emitted and checks happens-before: compute never
+    # starts before its first copy leg lands, clocks stay monotone, staged
+    # data is down before any launch that could read it.
+    # -----------------------------------------------------------------------
+    print("\n=== graph verifier: validate=True catches a seeded hazard ===")
+    from repro.analysis.graph import GraphVerificationError
+    from repro.analysis.races import check_ticket_streams, ticket_streams
+
+    engine().reset()
+    with offload_policy(mode="device", num_devices=2, scheduler="cost-aware"):
+        with hnp.offload_region("verified", validate=True):
+            ok = hnp.tanh(hnp.array(x) @ w1)     # clean graph: verifies,
+            hnp.asnumpy(ok)                       # lowers, and launches
+            bad = hnp.relu(ok @ w2)
+            bad.node.shape = (1, 1)               # corrupt the captured graph
+            try:
+                hnp.asnumpy(bad)                  # verifier fires pre-dispatch
+            except GraphVerificationError as e:
+                print(f"caught pre-dispatch: {e.violations[0].render()}")
+        streams = ticket_streams()
+    races = check_ticket_streams(streams)
+    n = sum(len(t) for t in streams.values())
+    print(f"race detector: {len(races)} violations over {n} tickets "
+          f"on {len(streams)} devices (happens-before holds)")
+
+    # -----------------------------------------------------------------------
     # Pipelined staging: killing the copy.
     #
     # The paper's bottleneck is the host<->device copy region.  By default

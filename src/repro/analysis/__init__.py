@@ -1,0 +1,24 @@
+"""``repro.analysis`` — the static-analysis substrate of the reproduction.
+
+Three passes over three layers of the offload seam:
+
+* :mod:`repro.analysis.graph` — pre-dispatch verifier for ``hnp`` lazy
+  expression graphs (shapes/dtypes vs registry host lowerings, residency
+  handle lifetimes, wave-schedule RAW/WAR hazards);
+* :mod:`repro.analysis.races` — happens-before checker over the
+  ``LaunchTicket`` event streams the modeled devices emit;
+* :mod:`repro.analysis.lint` — AST lint rule engine for the repo's
+  structural invariants (driven by ``tools/repro_lint.py`` / ``make lint``).
+
+All passes report :class:`~repro.analysis.base.Violation` records with
+stable rule names and raise :class:`~repro.analysis.base.AnalysisError`
+subclasses from their ``assert_*`` entry points.
+
+Import-light by contract (gated by ``tools/check_import_time.py``): this
+package pulls no jax and no engine at import; the dynamic passes load them
+lazily when handed live graphs or clusters.
+"""
+
+from repro.analysis.base import AnalysisError, Violation, format_violations
+
+__all__ = ["AnalysisError", "Violation", "format_violations"]

@@ -1,0 +1,55 @@
+"""Shared violation/report types for the ``repro.analysis`` passes.
+
+Every pass — graph verifier, stream-event race detector, lint rule engine —
+reports findings as :class:`Violation` records carrying a stable *named*
+rule (``"graph/shape-mismatch"``, ``"race/compute-before-copy-ready"``,
+``"models-no-dot-general"`` ...), a human message, and a location: a file
+position for lint, a node or ticket chain for the dynamic-model passes.
+Raising paths wrap the list in :class:`AnalysisError` so the rule names
+survive into the exception text (tests assert on them).
+
+Import-light by contract: stdlib only at module scope (gated by
+``tools/check_import_time.py`` alongside the frontend modules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+__all__ = ["AnalysisError", "Violation", "format_violations"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding of one analysis pass.
+
+    rule    — stable rule name (``<pass>/<invariant>`` or the lint rule id);
+    message — what broke, with enough operands/events to act on;
+    where   — location: ``path:line`` for lint, a ``node#id`` chain for the
+              graph verifier, a ticket chain for the race detector.
+    """
+
+    rule: str
+    message: str
+    where: str = ""
+
+    def render(self) -> str:
+        loc = f"{self.where}: " if self.where else ""
+        return f"{loc}{self.rule}: {self.message}"
+
+
+def format_violations(violations: Sequence[Violation]) -> str:
+    return "\n".join(v.render() for v in violations)
+
+
+class AnalysisError(Exception):
+    """Raised by the ``assert_*`` entry points when violations were found."""
+
+    def __init__(self, violations: Sequence[Violation], header: str) -> None:
+        self.violations: List[Violation] = list(violations)
+        n = len(self.violations)
+        super().__init__(
+            f"{header}: {n} violation{'s' if n != 1 else ''}\n"
+            + format_violations(self.violations)
+        )

@@ -1,0 +1,477 @@
+"""Pass 3 — the repo lint rule engine (AST-based, named per-path rules).
+
+The offload seam only stays transparent if every layer goes through it: the
+model zoo must not hand-roll contractions or bare engine accounting, only
+``compat.py`` may probe jax's surface, the frontend and this package must
+not import jax at module scope, the registry must stay closed (every pallas
+table row reachable, every registered op exercised by the parity suite),
+and every trace record must carry its placement.  Until now the only
+enforcement was one ad-hoc AST scan buried in ``tests/test_models.py``;
+this module generalizes it into named, per-path :class:`LintRule` objects
+so each invariant exists in exactly one place and is reported as
+``path:line: rule: message`` (the ``tools/repro_lint.py`` CLI and
+``make lint`` drive it; the old test is now a thin assertion over
+:func:`run_lint`).
+
+Rules:
+
+* ``models-no-dot-general`` — no raw ``*.dot_general(...)`` contraction
+  call sites under ``models/`` (dispatch through a registered OffloadOp);
+* ``models-no-bare-launch`` — no ``engine().launch(...)`` under
+  ``models/`` (accounting the scheduler/cost model/trace cannot see);
+* ``no-jax-probe-outside-compat`` — no ``getattr``/``hasattr`` probing of
+  jax modules outside ``compat.py`` (version seams live in one file);
+* ``frontend-import-light`` — no module-scope jax imports under
+  ``frontend/`` and ``analysis/`` (the import-time budget's static twin);
+* ``trace-record-device-id`` — every ``OffloadRecord``/``LaunchTicket``
+  constructor names its ``device_id`` (placement is never defaulted into
+  the trace);
+* ``registry-closure`` — repo-level: every ``pallas_lowering("x")`` fetch
+  in ``core/blas.py`` has a ``kernels/ops.py`` table row, and the parity
+  suite's sample dict covers exactly the registered ops.
+
+Import-light by contract: stdlib only at module scope.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Callable, List, Optional, Sequence, Set
+
+from repro.analysis.base import AnalysisError, Violation
+
+__all__ = [
+    "FileView",
+    "LintError",
+    "LintRule",
+    "RULES",
+    "check_registry_closure",
+    "lint_file",
+    "repo_root",
+    "run_lint",
+]
+
+
+class LintError(AnalysisError):
+    def __init__(self, violations: Sequence[Violation]) -> None:
+        super().__init__(violations, "repo lint failed")
+
+
+def repo_root(start: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Repo root: nearest ancestor of this file holding ``src/repro``."""
+    p = (start or pathlib.Path(__file__)).resolve()
+    for parent in [p] + list(p.parents):
+        if (parent / "src" / "repro").is_dir():
+            return parent
+    return pathlib.Path.cwd()
+
+
+@dataclasses.dataclass
+class FileView:
+    """One parsed source file as the rules see it."""
+
+    path: pathlib.Path
+    rel: str                      # posix path relative to the repo root
+    source: str
+    tree: Optional[ast.AST]       # None when the file failed to parse
+
+    @classmethod
+    def load(cls, path: pathlib.Path, root: pathlib.Path) -> "FileView":
+        source = path.read_text()
+        try:
+            rel = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        try:
+            tree = ast.parse(source)
+        except SyntaxError:
+            tree = None
+        return cls(path=path, rel=rel, source=source, tree=tree)
+
+    def where(self, node: ast.AST) -> str:
+        return f"{self.rel}:{getattr(node, 'lineno', 0)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintRule:
+    """One named invariant: where it applies, and how to check one file."""
+
+    name: str
+    description: str
+    paths: tuple                  # rel-path prefixes the rule applies under
+    check: Callable[["FileView"], List[Violation]]
+    exclude: tuple = ()           # rel-path prefixes/exact files exempted
+
+    def applies(self, rel: str) -> bool:
+        if not rel.endswith(".py"):
+            return False
+        if any(rel == e or rel.startswith(e) for e in self.exclude):
+            return False
+        return any(rel.startswith(p) for p in self.paths)
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _jax_aliases(tree: ast.AST) -> Set[str]:
+    """Names that are (or root) a jax module in this file: ``jax`` itself,
+    ``import jax.numpy as jnp``, ``from jax import numpy as jnp``, ..."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax" or a.name.startswith("jax."):
+                    names.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "jax" or mod.startswith("jax."):
+                for a in node.names:
+                    names.add(a.asname or a.name)
+    return names
+
+
+def _is_type_checking_if(node: ast.If) -> bool:
+    t = node.test
+    return (isinstance(t, ast.Name) and t.id == "TYPE_CHECKING") or (
+        isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING"
+    )
+
+
+def _module_scope_stmts(tree: ast.AST):
+    """Statements that execute at import time: the module body, recursing
+    into class bodies and if/try arms, never into function bodies; a
+    ``TYPE_CHECKING`` guard is exempt (it never runs at import)."""
+    stack = list(getattr(tree, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, ast.If):
+            if not _is_type_checking_if(node):
+                stack.extend(node.body)
+            stack.extend(node.orelse)
+        elif isinstance(node, ast.ClassDef):
+            stack.extend(node.body)
+        elif isinstance(node, ast.Try):
+            stack.extend(node.body)
+            for h in node.handlers:
+                stack.extend(h.body)
+            stack.extend(node.orelse)
+            stack.extend(node.finalbody)
+
+
+# ---------------------------------------------------------------------------
+# Per-file rule checks
+# ---------------------------------------------------------------------------
+
+def _check_no_dot_general(view: FileView) -> List[Violation]:
+    out = []
+    for node in ast.walk(view.tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "dot_general"
+        ):
+            out.append(Violation(
+                "models-no-dot-general",
+                "raw dot_general contraction under models/ — dispatch "
+                "through a registered OffloadOp (core/blas.py) so the "
+                "scheduler/cost model/trace see the call",
+                view.where(node),
+            ))
+    return out
+
+
+def _check_no_bare_launch(view: FileView) -> List[Violation]:
+    out = []
+    for node in ast.walk(view.tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+            continue
+        fn = node.func
+        if (
+            fn.attr == "launch"
+            and isinstance(fn.value, ast.Call)
+            and isinstance(fn.value.func, ast.Name)
+            and fn.value.func.id in ("engine", "_engine")
+        ):
+            out.append(Violation(
+                "models-no-bare-launch",
+                "bare engine().launch(...) under models/ — go through "
+                "dispatch()/dispatch_placed() so placement and accounting "
+                "stay on the registry path",
+                view.where(node),
+            ))
+    return out
+
+
+def _check_no_jax_probe(view: FileView) -> List[Violation]:
+    aliases = _jax_aliases(view.tree)
+    if not aliases:
+        return []
+    out = []
+    for node in ast.walk(view.tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("getattr", "hasattr")
+            and node.args
+        ):
+            continue
+        root = _root_name(node.args[0])
+        if root in aliases:
+            out.append(Violation(
+                "no-jax-probe-outside-compat",
+                f"{node.func.id}() probes the jax surface ({root}) — "
+                "version/feature seams live in repro/compat.py only",
+                view.where(node),
+            ))
+    return out
+
+
+def _check_import_light(view: FileView) -> List[Violation]:
+    out = []
+    for node in _module_scope_stmts(view.tree):
+        bad = None
+        if isinstance(node, ast.Import):
+            hits = [a.name for a in node.names
+                    if a.name == "jax" or a.name.startswith(("jax.", "jaxlib"))]
+            bad = ", ".join(hits) if hits else None
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "jax" or mod.startswith(("jax.", "jaxlib")):
+                bad = mod
+        if bad:
+            out.append(Violation(
+                "frontend-import-light",
+                f"module-scope import of {bad} — frontend/analysis modules "
+                "are import-light by contract (stdlib + numpy at module "
+                "scope; jax loads lazily at first use)",
+                view.where(node),
+            ))
+    return out
+
+
+_TRACE_RECORDS = ("OffloadRecord", "LaunchTicket")
+
+
+def _check_trace_device_id(view: FileView) -> List[Violation]:
+    out = []
+    for node in ast.walk(view.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = (
+            node.func.id if isinstance(node.func, ast.Name)
+            else node.func.attr if isinstance(node.func, ast.Attribute)
+            else None
+        )
+        if name not in _TRACE_RECORDS:
+            continue
+        kw = {k.arg for k in node.keywords}
+        if "device_id" not in kw and None not in kw:  # None == **kwargs
+            out.append(Violation(
+                "trace-record-device-id",
+                f"{name}(...) without device_id= — every trace record "
+                "carries the placement it ran on; defaulting it hides "
+                "mis-placed launches from the per-device rollups",
+                view.where(node),
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Repo-level rule: registry closure
+# ---------------------------------------------------------------------------
+
+def _string_keys(d: ast.Dict) -> List[str]:
+    return [k.value for k in d.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)]
+
+
+def _registered_names(blas_tree: ast.AST) -> List[str]:
+    """Names of ``register(OffloadOp(name="...", ...))`` sites."""
+    names = []
+    for node in ast.walk(blas_tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "OffloadOp"
+        ):
+            continue
+        for k in node.keywords:
+            if k.arg == "name" and isinstance(k.value, ast.Constant):
+                names.append(k.value.value)
+    return names
+
+
+def _pallas_fetches(blas_tree: ast.AST) -> List[tuple]:
+    """``(name, lineno)`` for every literal ``pallas_lowering("x")`` call."""
+    fetches = []
+    for node in ast.walk(blas_tree):
+        if (
+            isinstance(node, ast.Call)
+            and _root_name(node.func) is not None
+            and (
+                (isinstance(node.func, ast.Name)
+                 and node.func.id == "pallas_lowering")
+                or (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "pallas_lowering")
+            )
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)
+        ):
+            fetches.append((node.args[0].value, node.lineno))
+    return fetches
+
+
+def check_registry_closure(root: Optional[pathlib.Path] = None) -> List[Violation]:
+    """Static closure of the op registry across its three homes:
+    ``core/blas.py`` (descriptors + pallas fetches), ``kernels/ops.py``
+    (the ``PALLAS_LOWERINGS`` table), ``tests/test_dispatch.py`` (the
+    parity-sample dict the numerics suite sweeps)."""
+    root = root or repo_root()
+    blas = root / "src" / "repro" / "core" / "blas.py"
+    ops = root / "src" / "repro" / "kernels" / "ops.py"
+    samples = root / "tests" / "test_dispatch.py"
+    out: List[Violation] = []
+    missing = [p for p in (blas, ops, samples) if not p.is_file()]
+    if missing:
+        return [Violation(
+            "registry-closure",
+            f"cannot check: missing {[str(m) for m in missing]}",
+        )]
+    blas_tree = ast.parse(blas.read_text())
+    ops_tree = ast.parse(ops.read_text())
+    samples_tree = ast.parse(samples.read_text())
+
+    table: List[str] = []
+    for node in ast.walk(ops_tree):
+        if (
+            isinstance(node, ast.Assign)
+            and any(isinstance(t, ast.Name) and t.id == "PALLAS_LOWERINGS"
+                    for t in node.targets)
+            and isinstance(node.value, ast.Dict)
+        ):
+            table = _string_keys(node.value)
+    sample_keys: List[str] = []
+    for node in ast.walk(samples_tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "_samples":
+            for ret in ast.walk(node):
+                if isinstance(ret, ast.Return) and isinstance(ret.value, ast.Dict):
+                    sample_keys = _string_keys(ret.value)
+
+    registered = _registered_names(blas_tree)
+    rel = blas.relative_to(root).as_posix()
+    for name, lineno in _pallas_fetches(blas_tree):
+        if name not in table:
+            out.append(Violation(
+                "registry-closure",
+                f"pallas_lowering({name!r}) has no PALLAS_LOWERINGS row in "
+                "kernels/ops.py — the fetch would KeyError at first device "
+                "dispatch",
+                f"{rel}:{lineno}",
+            ))
+    for name in registered:
+        if name not in sample_keys:
+            out.append(Violation(
+                "registry-closure",
+                f"registered op {name!r} has no parity sample in "
+                "tests/test_dispatch.py::_samples — the numerics suite "
+                "never exercises it",
+                rel,
+            ))
+    for name in sample_keys:
+        if name not in registered:
+            out.append(Violation(
+                "registry-closure",
+                f"parity sample {name!r} has no registered OffloadOp in "
+                "core/blas.py — stale sample",
+                samples.relative_to(root).as_posix(),
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The rule table + engine
+# ---------------------------------------------------------------------------
+
+RULES = (
+    LintRule(
+        name="models-no-dot-general",
+        description="no raw *.dot_general(...) call sites under models/",
+        paths=("src/repro/models/",),
+        check=_check_no_dot_general,
+    ),
+    LintRule(
+        name="models-no-bare-launch",
+        description="no bare engine().launch(...) under models/",
+        paths=("src/repro/models/",),
+        check=_check_no_bare_launch,
+    ),
+    LintRule(
+        name="no-jax-probe-outside-compat",
+        description="getattr/hasattr probing of jax only in compat.py",
+        paths=("src/repro/",),
+        exclude=("src/repro/compat.py",),
+        check=_check_no_jax_probe,
+    ),
+    LintRule(
+        name="frontend-import-light",
+        description="no module-scope jax imports under frontend/ and analysis/",
+        paths=("src/repro/frontend/", "src/repro/analysis/"),
+        check=_check_import_light,
+    ),
+    LintRule(
+        name="trace-record-device-id",
+        description="OffloadRecord/LaunchTicket constructors carry device_id",
+        paths=("src/repro/",),
+        check=_check_trace_device_id,
+    ),
+)
+
+
+def lint_file(
+    path: pathlib.Path,
+    root: Optional[pathlib.Path] = None,
+    rules: Optional[Sequence[LintRule]] = None,
+) -> List[Violation]:
+    root = root or repo_root()
+    view = FileView.load(pathlib.Path(path), root)
+    if view.tree is None:
+        return [Violation("parse-error", "file does not parse", view.rel)]
+    out: List[Violation] = []
+    for rule in (RULES if rules is None else rules):
+        if rule.applies(view.rel):
+            out.extend(rule.check(view))
+    return out
+
+
+def run_lint(
+    root: Optional[pathlib.Path] = None,
+    paths: Optional[Sequence[pathlib.Path]] = None,
+    rules: Optional[Sequence[LintRule]] = None,
+    *,
+    repo_rules: bool = True,
+) -> List[Violation]:
+    """Lint every ``.py`` under ``paths`` (default: ``src/repro``) with the
+    per-file rules, plus the repo-level registry-closure rule."""
+    root = root or repo_root()
+    if paths is None:
+        paths = [root / "src" / "repro"]
+    out: List[Violation] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(lint_file(f, root, rules))
+    if repo_rules:
+        out.extend(check_registry_closure(root))
+    return out

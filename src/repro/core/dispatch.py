@@ -145,6 +145,7 @@ def dispatch(
     *args,
     handle: Optional[DeviceHandle] = None,
     resident_fraction: Optional[float] = None,
+    validate: bool = False,
     **kwargs,
 ):
     """Route one registered op through the offload seam and execute it.
@@ -161,7 +162,7 @@ def dispatch(
     """
     out, _ = dispatch_placed(
         name, *args, handle=handle, resident_fraction=resident_fraction,
-        **kwargs,
+        validate=validate, **kwargs,
     )
     return out
 
@@ -171,6 +172,7 @@ def dispatch_placed(
     *args,
     handle: Optional[DeviceHandle] = None,
     resident_fraction: Optional[float] = None,
+    validate: bool = False,
     **kwargs,
 ):
     """Graph-aware dispatch entry: like :func:`dispatch`, but returns
@@ -183,7 +185,17 @@ def dispatch_placed(
     operand/result bytes stay device-resident) and reads the placement back
     so the produced intermediate can be pinned where it actually lives and
     its consumers routed (or d2d-migrated) to the data.
+
+    ``validate=True`` runs the :mod:`repro.analysis.graph` pre-dispatch
+    checks on this call — op known, ``handle`` alive and engine-owned,
+    operand specs accepted by the host lowering — raising
+    ``GraphVerificationError`` with named violations before any cost is
+    scored or any record written.
     """
+    if validate:
+        from repro.analysis.graph import assert_call_valid
+
+        assert_call_valid(name, args, kwargs, handle=handle)
     op = get_op(name)
     cost = op.cost(*args, **kwargs)
     arrays = [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]

@@ -195,6 +195,18 @@ class LaunchTicket:
     copy_ready_s: float = 0.0    # first operand chunk landed; compute may start
     copy_done_s: float = 0.0     # staging + d2d stream fully drained
     complete_s: float = 0.0      # compute retired (launch completion event)
+    # Compute-stream start: max(compute engine free, copy_ready).  Stamped so
+    # the happens-before checker (repro.analysis.races) can verify compute
+    # never races its staging instead of re-deriving the schedule.
+    compute_start_s: float = 0.0
+    # Which modeled path issued the ticket: "launch" (offloaded op),
+    # "prefetch" (cross-wave staging), "d2d" (handle migration), "restage"
+    # (host re-stage after loss/shrink), "requeue" (orphan reschedule).
+    kind: str = "launch"
+    # Residency credit the launch was scored with (>=1.0 must charge no DMA).
+    resident_fraction: float = 0.0
+    # Device the ticket was issued on (stamped by VirtualDevice.issue).
+    device_id: int = HOST_DEVICE_ID
 
 
 class VirtualDevice:
@@ -280,7 +292,13 @@ class VirtualDevice:
         return max(self.dma_free_s, self.compute_free_s)
 
     def issue(
-        self, cost: OpCost, bd: RegionBreakdown, shape_key: str
+        self,
+        cost: OpCost,
+        bd: RegionBreakdown,
+        shape_key: str,
+        *,
+        kind: str = "launch",
+        resident_fraction: float = 0.0,
     ) -> LaunchTicket:
         """Issue one launch event-wise: charge its staging (plus any d2d
         leg) to the DMA stream, gate compute on the *first* landed chunk
@@ -298,7 +316,8 @@ class VirtualDevice:
         issue_s = self.dma_free_s
         self.dma_free_s = issue_s + copy
         ready = issue_s + gate
-        self.compute_free_s = max(self.compute_free_s, ready) + work
+        compute_start = max(self.compute_free_s, ready)
+        self.compute_free_s = compute_start + work
         if isinstance(bd, PipelinedBreakdown):
             # compute cannot retire before its last chunk has landed
             self.compute_free_s = max(self.compute_free_s, self.dma_free_s)
@@ -310,6 +329,10 @@ class VirtualDevice:
             copy_ready_s=ready,
             copy_done_s=self.dma_free_s,
             complete_s=self.compute_free_s,
+            compute_start_s=compute_start,
+            kind=kind,
+            resident_fraction=float(resident_fraction),
+            device_id=self.device_id,
         )
         self.enqueue(ticket)
         return ticket
@@ -326,6 +349,9 @@ class VirtualDevice:
             copy_ready_s=start,
             copy_done_s=start,
             complete_s=self.compute_free_s,
+            compute_start_s=start,
+            kind="requeue",
+            device_id=self.device_id,
         )
         self.enqueue(moved)
         return moved
@@ -645,7 +671,7 @@ class HeroCluster:
             dst.boot()
         dst.mark_resident(handle.name)
         cost = d2d_cost(handle.nbytes)
-        dst.issue(cost, bd, handle.name)
+        dst.issue(cost, bd, handle.name, kind="d2d")
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op, shape_key=handle.name, dtype="",
@@ -688,7 +714,7 @@ class HeroCluster:
         if not dev.booted:
             dev.boot()
         dev.mark_resident(handle.name)
-        dev.issue(cost, bd, handle.name)
+        dev.issue(cost, bd, handle.name, kind="restage")
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op, shape_key=handle.name, dtype="",
@@ -728,7 +754,7 @@ class HeroCluster:
             compute_s=0.0,
             host_s=0.0,
         )
-        dev.issue(cost, bd, name)
+        dev.issue(cost, bd, name, kind="prefetch")
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op, shape_key=name, dtype="",
@@ -851,7 +877,10 @@ class HeroCluster:
         if not dev.booted:
             dev.boot()
         bd = dev.breakdown_for(cost, self.policy, key)
-        dev.issue(cost, bd, key)
+        dev.issue(
+            cost, bd, key,
+            resident_fraction=1.0 if dev.is_resident(key) else 0.0,
+        )
         return dev.device_id, bd
 
     # ---- modeled completion ----------------------------------------------
@@ -937,7 +966,7 @@ class HeroCluster:
             if resident_fraction is None and dev.is_resident(key):
                 bd = dev.breakdown_for(cost, pol, key)
                 rf = 1.0
-            dev.issue(cost, bd, key)
+            dev.issue(cost, bd, key, resident_fraction=rf)
 
         if not offload:
             backend = "host"

@@ -136,11 +136,16 @@ class GraphRegion:
     the multi-op handle-lifetime contract on :class:`HeroCluster`.
     """
 
-    def __init__(self, name: Optional[str] = None) -> None:
+    def __init__(
+        self, name: Optional[str] = None, *, validate: bool = False
+    ) -> None:
         self.name = name or f"hnp-graph-{next(_REGION_IDS)}"
         self.residency: Dict[int, Any] = {}   # node id -> DeviceHandle
         self.owned: set = set()               # handle names we pinned
         self.report = GraphReport(self.name)
+        # validate=True runs repro.analysis.graph over every graph forced
+        # inside this region before anything dispatches
+        self.validate = bool(validate)
 
     # -- residency ----------------------------------------------------------
     def handle_for(self, node: Node):
@@ -678,6 +683,10 @@ def _prefetch_next_wave(
 
 
 def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
+    if getattr(region, "validate", False):
+        from repro.analysis.graph import assert_valid
+
+        assert_valid(roots, region)
     order = _collect(roots)
     if not order:
         return

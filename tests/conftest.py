@@ -101,6 +101,40 @@ except ImportError:
 
         return _Strategy(sample)
 
+    def _tuples(*strategies):
+        def sample(rng, i):
+            return tuple(s.example_at(rng, i) for s in strategies)
+
+        return _Strategy(sample)
+
+    def _one_of(*strategies):
+        # accept both one_of(a, b) and one_of([a, b])
+        strats = (
+            list(strategies[0])
+            if len(strategies) == 1 and isinstance(strategies[0], (list, tuple))
+            else list(strategies)
+        )
+
+        def sample(rng, i):
+            if i < len(strats):
+                return strats[i].example_at(rng, i)
+            return strats[rng.randrange(len(strats))].example_at(rng, i)
+
+        return _Strategy(sample)
+
+    def _none():
+        return _just(None)
+
+    def _text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=8):
+        chars = list(alphabet)
+        lo, hi = int(min_size), int(max_size)
+
+        def sample(rng, i):
+            size = lo if i == 0 else (hi if i == 1 else rng.randint(lo, hi))
+            return "".join(chars[rng.randrange(len(chars))] for _ in range(size))
+
+        return _Strategy(sample)
+
     def _settings(**kw):
         def deco(fn):
             fn._shim_settings = dict(getattr(fn, "_shim_settings", {}), **kw)
@@ -170,6 +204,10 @@ except ImportError:
     _st.booleans = _booleans
     _st.just = _just
     _st.lists = _lists
+    _st.tuples = _tuples
+    _st.one_of = _one_of
+    _st.none = _none
+    _st.text = _text
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st

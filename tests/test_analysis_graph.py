@@ -1,0 +1,278 @@
+"""Pass 1 (``repro.analysis.graph``) — the hnp graph verifier.
+
+Clean graphs verify clean; each seeded corruption (shape/dtype lies, stale
+cached values, dead or escaped residency handles, double-staged buffers,
+hazardous wave plans) produces its precisely named violation.  The
+``validate=True`` surfaces on ``dispatch_placed`` and ``offload_region``
+raise before anything launches.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.hnp as hnp
+from repro.analysis import Violation
+from repro.analysis.graph import (
+    GraphVerificationError,
+    WavePlan,
+    check_plan,
+    collect_nodes,
+    plan_waves,
+    verify_call,
+    verify_graph,
+)
+from repro.core import engine, offload_policy
+from repro.core.dispatch import dispatch_placed
+
+
+def rules(violations):
+    return {v.rule for v in violations}
+
+
+@pytest.fixture(autouse=True)
+def _host_mode():
+    engine().reset()
+    with offload_policy(mode="host"):
+        yield
+    engine().reset()
+
+
+def _gemm_chain():
+    a = hnp.array(np.ones((8, 6), np.float32))
+    b = hnp.array(np.ones((6, 4), np.float32))
+    return a, b, hnp.tanh(a @ b) + 1.0
+
+
+# ---------------------------------------------------------------------------
+# clean paths
+# ---------------------------------------------------------------------------
+
+def test_clean_graph_verifies_clean():
+    _, _, y = _gemm_chain()
+    assert verify_graph([y.node]) == []
+
+
+def test_clean_region_validates_and_matches_reference():
+    x = np.asarray(np.random.default_rng(0).normal(size=(32, 16)), np.float32)
+    w = np.asarray(np.random.default_rng(1).normal(size=(16, 8)), np.float32)
+    with hnp.offload_region("validated", validate=True):
+        got = hnp.asnumpy(hnp.tanh(hnp.array(x) @ w))
+    np.testing.assert_allclose(got, np.tanh(x @ w), rtol=1e-5, atol=1e-5)
+
+
+def test_collect_nodes_covers_evaluated_subgraph():
+    a, b, y = _gemm_chain()
+    ids = {n.id for n in collect_nodes([y.node])}
+    assert a.node.id in ids and b.node.id in ids and y.node.id in ids
+
+
+@settings(max_examples=10)
+@given(
+    st.tuples(st.integers(min_value=1, max_value=9),
+              st.integers(min_value=1, max_value=9),
+              st.integers(min_value=1, max_value=9)),
+    st.one_of(st.just("tanh"), st.just("relu"), st.just("exp")),
+)
+def test_random_clean_graphs_verify_clean(dims, act):
+    m, k, n = dims
+    a = hnp.array(np.ones((m, k), np.float32))
+    b = hnp.array(np.ones((k, n), np.float32))
+    y = getattr(hnp, act)(a @ b)
+    assert verify_graph([y.node]) == []
+
+
+# ---------------------------------------------------------------------------
+# structural corruption -> named violations
+# ---------------------------------------------------------------------------
+
+def test_seeded_shape_mismatch_is_named():
+    _, _, y = _gemm_chain()
+    y.node.inputs[0].shape = (99, 99)   # lie about the gemm's result shape
+    assert "graph/shape-mismatch" in rules(verify_graph([y.node]))
+
+
+def test_seeded_dtype_mismatch_is_named():
+    a, _, _ = _gemm_chain()
+    z = a + a
+    z.node.dtype = np.dtype(np.float64)
+    assert "graph/dtype-mismatch" in rules(verify_graph([z.node]))
+
+
+def test_stale_cached_value_is_named():
+    a, _, _ = _gemm_chain()
+    z = a + a
+    z.node.set_value(np.zeros((8, 6), np.float32))  # cache over live inputs: ok
+    assert verify_graph([z.node]) == []
+    g = hnp.tanh(a)                        # unevaluated producer
+    z.node.inputs = (g.node, g.node)       # spliced under the cached consumer
+    assert "graph/stale-value" in rules(verify_graph([z.node]))
+
+
+def test_unknown_op_is_named():
+    from repro.frontend.lazy import Node
+
+    a, _, _ = _gemm_chain()
+    bogus = Node("frobnicate", (a.node,), {}, (8, 6), np.dtype(np.float32))
+    assert "graph/unknown-op" in rules(verify_graph([bogus]))
+
+
+def test_bad_arity_is_named():
+    from repro.frontend.lazy import Node
+
+    a, _, _ = _gemm_chain()
+    bad = Node("add", (a.node,), {}, (8, 6), np.dtype(np.float32))
+    assert "graph/bad-arity" in rules(verify_graph([bad]))
+
+
+# ---------------------------------------------------------------------------
+# residency lifetimes
+# ---------------------------------------------------------------------------
+
+def test_use_after_unstage_is_named():
+    eng = engine()
+    h = eng.pin_handle("uau", 4096.0, device_id=0)
+    a = hnp.array(np.ones((4, 4), np.float32))
+    a.node.attrs["handle"] = h
+    eng.unstage_handle(h)
+    v = verify_graph([(a @ a).node])
+    assert "graph/use-after-unstage" in rules(v)
+    assert any("uau" in x.message for x in v)
+
+
+def test_handle_escaping_its_region_is_named():
+    eng = engine()
+    h = eng.pin_handle("esc", 4096.0, device_id=0)
+    a = hnp.array(np.ones((4, 4), np.float32))
+    a.node.attrs["handle"] = h
+    eng._handles.pop("esc")               # ledger forgets it; token stays valid
+    assert "graph/handle-escapes-region" in rules(verify_graph([(a @ a).node]))
+
+
+def test_double_stage_of_same_buffer_is_named():
+    eng = engine()
+    x = np.ones((4, 4), np.float32)
+    a = hnp.array(x)
+    b = hnp.array(x)                      # same underlying buffer, new leaf
+    b.node.set_value(a.node.value)        # unify the buffers explicitly
+    a.node.attrs["handle"] = eng.pin_handle("h1", 64.0, device_id=0)
+    b.node.attrs["handle"] = eng.pin_handle("h2", 64.0, device_id=0)
+    v = verify_graph([(a @ b).node])
+    assert "graph/double-stage" in rules(v)
+
+
+# ---------------------------------------------------------------------------
+# wave-schedule hazards (corrupted plans -> named violations)
+# ---------------------------------------------------------------------------
+
+def _diamond():
+    a = hnp.array(np.ones((8, 8), np.float32))
+    y = hnp.tanh(a @ a)
+    z = y @ a                              # heavy consumer of tanh
+    w = hnp.relu(y)                        # elementwise consumer of tanh
+    return a, y, z, w
+
+
+def test_real_plan_is_hazard_free():
+    _, _, z, w = _diamond()
+    plan = plan_waves([z.node, w.node])
+    assert check_plan(plan) == []
+    assert len(plan.waves) >= 2
+
+
+def test_raw_hazard_consumer_scheduled_with_producer():
+    _, _, z, w = _diamond()
+    plan = plan_waves([z.node, w.node])
+    flat = [[n for wave in plan.waves for n in wave]]   # everything in wave 0
+    v = check_plan(WavePlan(plan.order, flat, {}, [], []))
+    assert "graph/raw-hazard" in rules(v)
+
+
+def test_raw_hazard_dependent_nodes_in_one_stacked_launch():
+    _, _, z, w = _diamond()
+    plan = plan_waves([z.node, w.node])
+    heavy = [n for n in plan.order if n.op.startswith("registry:")]
+    assert len(heavy) == 2
+    v = check_plan(WavePlan(plan.order, plan.waves, plan.chains, [heavy], []))
+    assert "graph/raw-hazard" in rules(v)
+    assert any("stacked launch" in x.message for x in v)
+
+
+def test_war_hazard_fused_link_with_live_outside_reader():
+    _, _, z, w = _diamond()
+    plan = plan_waves([z.node, w.node])
+    order = plan.order
+    gemm1 = min((n for n in order if n.op.startswith("registry:")),
+                key=lambda n: n.id)
+    tanh = next(n for n in order if n.op == "tanh")
+    relu = next(n for n in order if n.op == "relu")
+    corrupted = {gemm1.id: [tanh, relu]}  # fuses tanh although z still reads it
+    v = check_plan(WavePlan(order, plan.waves, corrupted, [], []))
+    assert "graph/war-hazard" in rules(v)
+
+
+def test_cycle_reported_for_unschedulable_nodes():
+    _, _, z, w = _diamond()
+    plan = plan_waves([z.node, w.node])
+    v = check_plan(WavePlan(plan.order, [], {}, [], plan.order[:1]))
+    assert "graph/cycle" in rules(v)
+
+
+# ---------------------------------------------------------------------------
+# validate=True surfaces
+# ---------------------------------------------------------------------------
+
+def test_offload_region_validate_raises_on_seeded_hazard():
+    with hnp.offload_region("seeded", validate=True):
+        a = hnp.array(np.ones((8, 6), np.float32))
+        b = hnp.array(np.ones((6, 4), np.float32))
+        y = a @ b
+        y.node.shape = (123, 456)          # corrupt before forcing
+        with pytest.raises(GraphVerificationError) as exc:
+            hnp.asnumpy(y)
+    assert "graph/shape-mismatch" in str(exc.value)
+
+
+def test_dispatch_placed_validate_rejects_bad_operands():
+    with pytest.raises(GraphVerificationError) as exc:
+        dispatch_placed(
+            "gemm",
+            np.ones((4, 3), np.float32),
+            np.ones((5, 2), np.float32),   # inner dims disagree
+            validate=True,
+        )
+    assert "graph/shape-mismatch" in str(exc.value)
+
+
+def test_dispatch_placed_validate_rejects_unknown_op():
+    with pytest.raises(GraphVerificationError) as exc:
+        dispatch_placed("no_such_op", validate=True)
+    assert "graph/unknown-op" in str(exc.value)
+
+
+def test_dispatch_placed_validate_rejects_dead_handle():
+    eng = engine()
+    h = eng.pin_handle("dead", 1024.0, device_id=0)
+    eng.unstage_handle(h)
+    v = verify_call(
+        "gemm",
+        (np.ones((4, 3), np.float32), np.ones((3, 2), np.float32)),
+        handle=h,
+    )
+    assert "graph/use-after-unstage" in rules(v)
+
+
+def test_dispatch_placed_validate_accepts_clean_call():
+    out, launch = dispatch_placed(
+        "gemm",
+        np.ones((4, 3), np.float32),
+        np.ones((3, 2), np.float32),
+        validate=True,
+    )
+    assert out.shape == (4, 2)
+
+
+def test_violations_render_with_rule_names():
+    v = Violation("graph/raw-hazard", "msg", "node#1(add)")
+    assert v.render() == "node#1(add): graph/raw-hazard: msg"

@@ -1,0 +1,225 @@
+"""Pass 2 (``repro.analysis.races``) — the happens-before checker over
+``LaunchTicket`` event streams.
+
+Real workloads (pipelined staging, cross-wave prefetch, d2d migration,
+failure requeue) must check race-free; each injected corruption — compute
+starting before its copy-ready leg, clocks running backwards, a launch
+outrunning a staging copy, a resident launch charging DMA — produces its
+named violation with the offending ticket chain.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.hnp as hnp
+from repro.analysis.races import (
+    StreamRaceError,
+    assert_race_free,
+    check_cluster,
+    check_ticket_streams,
+    ticket_streams,
+)
+from repro.core import engine, offload_policy
+
+
+def rules(violations):
+    return {v.rule for v in violations}
+
+
+def _run_workload(**policy):
+    """Force a two-wave hnp workload; return the live per-device streams."""
+    engine().reset()
+    kw = dict(mode="device", num_devices=2, scheduler="cost-aware")
+    kw.update(policy)
+    with offload_policy(**kw):
+        with hnp.offload_region("races"):
+            a = hnp.array(np.ones((128, 96), np.float32))
+            w1 = np.ones((96, 128), np.float32)
+            w2 = np.ones((128, 64), np.float32)
+            h = hnp.tanh(a @ w1)
+            hnp.asnumpy(h @ w2)
+        return ticket_streams()
+
+
+def _seed(streams, dev_key, idx, **replace):
+    out = {k: list(v) for k, v in streams.items()}
+    out[dev_key][idx] = dataclasses.replace(out[dev_key][idx], **replace)
+    return out
+
+
+def _first(streams):
+    dev = next(k for k in sorted(streams) if streams[k])
+    return dev, streams[dev][0]
+
+
+# ---------------------------------------------------------------------------
+# clean paths
+# ---------------------------------------------------------------------------
+
+def test_serial_workload_is_race_free():
+    streams = _run_workload(pipeline_staging=False)
+    assert sum(len(v) for v in streams.values()) > 0
+    assert check_ticket_streams(streams) == []
+
+
+def test_pipelined_prefetch_workload_is_race_free():
+    streams = _run_workload(pipeline_staging=True, prefetch_staging=True)
+    assert check_ticket_streams(streams) == []
+    kinds = {t.kind for v in streams.values() for t in v}
+    assert "launch" in kinds
+
+
+def test_d2d_migration_edges_are_race_free():
+    engine().reset()
+    with offload_policy(mode="device", num_devices=2):
+        eng = engine()
+        h = eng.pin_handle("mig", 1 << 20, device_id=0)
+        eng.migrate_handle(h, 1)
+        streams = ticket_streams()
+    kinds = {t.kind for v in streams.values() for t in v}
+    assert "d2d" in kinds
+    assert check_ticket_streams(streams) == []
+
+
+def test_failure_requeue_is_race_free():
+    engine().reset()
+    with offload_policy(mode="device", num_devices=2):
+        with hnp.offload_region("ft"):
+            a = hnp.array(np.ones((64, 64), np.float32))
+            hnp.asnumpy(a @ a)
+        engine().fail_device(0) if engine().devices[0].inflight else \
+            engine().fail_device(1)
+        streams = ticket_streams()
+    assert check_ticket_streams(streams) == []
+
+
+def test_fully_resident_launch_charges_zero_dma():
+    engine().reset()
+    with offload_policy(mode="device", num_devices=1):
+        from repro.core.dispatch import dispatch
+
+        x = np.ones((64, 64), np.float32)
+        eng = engine()
+        h = eng.pin_handle("res", float(3 * x.nbytes), device_id=0)
+        dispatch("matmul", x, x, handle=h, resident_fraction=1.0)
+        streams = ticket_streams()
+    launches = [t for v in streams.values() for t in v if t.kind == "launch"]
+    assert launches and launches[0].resident_fraction >= 1.0
+    assert launches[0].copy_done_s == pytest.approx(launches[0].issue_s)
+    assert check_ticket_streams(streams) == []
+
+
+def test_check_cluster_reads_live_engine():
+    engine().reset()
+    with offload_policy(mode="device", num_devices=2):
+        with hnp.offload_region("live"):
+            a = hnp.array(np.ones((64, 64), np.float32))
+            hnp.asnumpy(a @ a)
+        assert check_cluster() == []
+        assert_race_free()
+    engine().reset()
+
+
+# ---------------------------------------------------------------------------
+# injected corruption -> named violations (the ISSUE's error-path matrix)
+# ---------------------------------------------------------------------------
+
+def test_injected_compute_before_copy_ready():
+    streams = _run_workload()
+    dev, t = _first(streams)
+    bad = _seed(streams, dev, 0, compute_start_s=t.copy_ready_s - 0.25)
+    v = check_ticket_streams(bad)
+    assert "race/compute-before-copy-ready" in rules(v)
+    assert any(f"dev{dev}[0]" in x.where for x in v)
+
+
+def test_injected_complete_before_copy_done():
+    streams = _run_workload()
+    dev, t = _first(streams)
+    bad = _seed(streams, dev, 0, complete_s=t.copy_done_s - 0.25)
+    assert "race/complete-before-copy-done" in rules(check_ticket_streams(bad))
+
+
+def test_injected_non_monotone_dma_clock():
+    streams = _run_workload(num_devices=1)
+    dev = next(k for k, v in streams.items() if len(v) >= 2)
+    first = streams[dev][0]
+    bad = _seed(streams, dev, 1, issue_s=first.copy_done_s - 1.0)
+    v = check_ticket_streams(bad)
+    assert "race/dma-clock-monotone" in rules(v)
+    assert any("->" in x.where for x in v)  # reports the ticket chain
+
+
+def test_injected_non_monotone_compute_clock():
+    streams = _run_workload(num_devices=1)
+    dev = next(k for k, v in streams.items() if len(v) >= 2)
+    first = streams[dev][0]
+    bad = _seed(streams, dev, 1,
+                compute_start_s=first.complete_s - 1.0,
+                copy_ready_s=first.complete_s - 1.0,
+                issue_s=first.complete_s - 1.0)
+    assert "race/compute-clock-monotone" in rules(check_ticket_streams(bad))
+
+
+def test_injected_launch_outrunning_prefetch_copy():
+    # single device: the cross-wave prefetch and its consumer launch share
+    # one stream, so the staging->compute happens-before edge is checkable
+    streams = _run_workload(prefetch_staging=True, num_devices=1)
+    target = None
+    for dev, tickets in streams.items():
+        for i, t in enumerate(tickets):
+            if t.kind == "prefetch" and any(
+                u.kind == "launch" for u in tickets[i + 1:]
+            ):
+                target = (dev, i, t)
+    assert target is not None, "workload must prefetch ahead of a launch"
+    dev, i, s = target
+    assert check_ticket_streams(streams) == []
+    bad = _seed(streams, dev, i, copy_done_s=s.copy_done_s + 100.0,
+                complete_s=s.complete_s + 100.0)
+    v = check_ticket_streams(bad)
+    assert "race/read-before-copy-done" in rules(v)
+    assert any("prefetch" in x.where for x in v)
+
+
+def test_injected_resident_launch_charging_dma():
+    streams = _run_workload()
+    dev, t = _first(streams)
+    assert t.copy_done_s > t.issue_s        # it really did stage bytes
+    bad = _seed(streams, dev, 0, resident_fraction=1.0)
+    assert "race/resident-charged-dma" in rules(check_ticket_streams(bad))
+
+
+def test_injected_device_mismatch():
+    streams = _run_workload()
+    dev, _ = _first(streams)
+    bad = _seed(streams, dev, 0, device_id=dev + 5)
+    assert "race/device-mismatch" in rules(check_ticket_streams(bad))
+
+
+def test_assert_race_free_raises_with_named_rule():
+    streams = _run_workload()
+    dev, t = _first(streams)
+    bad = _seed(streams, dev, 0, compute_start_s=t.copy_ready_s - 0.25)
+    with pytest.raises(StreamRaceError) as exc:
+        assert_race_free(bad)
+    assert "race/compute-before-copy-ready" in str(exc.value)
+
+
+@settings(max_examples=10)
+@given(
+    st.integers(min_value=1, max_value=3),
+    st.booleans(),
+    st.sampled_from(["least-loaded", "round-robin", "cost-aware"]),
+)
+def test_random_topologies_are_race_free(num_devices, prefetch, scheduler):
+    streams = _run_workload(
+        num_devices=num_devices,
+        prefetch_staging=prefetch,
+        scheduler=scheduler,
+    )
+    assert check_ticket_streams(streams) == []

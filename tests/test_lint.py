@@ -1,0 +1,197 @@
+"""Pass 3 (``repro.analysis.lint``) — the repo lint rule engine.
+
+The clean tree lints clean (that is what ``make lint`` gates); each rule
+fires with its name on a seeded offending file; the repo-level registry
+closure catches a dangling pallas fetch / missing parity sample.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.lint import (
+    RULES,
+    check_registry_closure,
+    lint_file,
+    repo_root,
+    run_lint,
+)
+
+ROOT = repo_root()
+
+
+def rules_of(violations):
+    return {v.rule for v in violations}
+
+
+def _write(root, rel, source):
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the clean tree
+# ---------------------------------------------------------------------------
+
+def test_clean_tree_lints_clean():
+    violations = run_lint(ROOT)
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+def test_registry_closure_clean_on_tree():
+    assert check_registry_closure(ROOT) == []
+
+
+def test_rule_table_names_are_unique_and_scoped():
+    names = [r.name for r in RULES]
+    assert len(names) == len(set(names))
+    for r in RULES:
+        assert r.paths and r.description
+
+
+def test_cli_exits_zero_on_clean_tree():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "repro_lint.py")],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# seeded offenders -> named rules (the regression tests per AST rule)
+# ---------------------------------------------------------------------------
+
+def test_dot_general_under_models_is_flagged(tmp_path):
+    p = _write(tmp_path, "src/repro/models/bad.py",
+               "def f(lax, a, b):\n"
+               "    return lax.dot_general(a, b, (((1,), (0,)), ((), ())))\n")
+    v = lint_file(p, tmp_path)
+    assert rules_of(v) == {"models-no-dot-general"}
+    assert "src/repro/models/bad.py:2" in v[0].where
+
+
+def test_bare_engine_launch_under_models_is_flagged(tmp_path):
+    p = _write(tmp_path, "src/repro/models/bad.py",
+               "from repro.core.hero import engine\n"
+               "def f(cost):\n"
+               "    return engine().launch(cost)\n")
+    assert rules_of(lint_file(p, tmp_path)) == {"models-no-bare-launch"}
+
+
+def test_jax_probe_outside_compat_is_flagged(tmp_path):
+    p = _write(tmp_path, "src/repro/core/probe.py",
+               "import jax.numpy as jnp\n"
+               "HAS = hasattr(jnp, 'einsum')\n")
+    assert rules_of(lint_file(p, tmp_path)) == {"no-jax-probe-outside-compat"}
+
+
+def test_jax_probe_inside_compat_is_exempt(tmp_path):
+    p = _write(tmp_path, "src/repro/compat.py",
+               "import jax\nHAS = hasattr(jax, 'sharding')\n")
+    assert lint_file(p, tmp_path) == []
+
+
+def test_module_scope_jax_import_in_frontend_is_flagged(tmp_path):
+    p = _write(tmp_path, "src/repro/frontend/bad.py", "import jax\n")
+    v = lint_file(p, tmp_path)
+    assert rules_of(v) == {"frontend-import-light"}
+    p2 = _write(tmp_path, "src/repro/analysis/bad.py",
+                "from jax.experimental import pallas\n")
+    assert rules_of(lint_file(p2, tmp_path)) == {"frontend-import-light"}
+
+
+def test_type_checking_and_function_scope_imports_are_exempt(tmp_path):
+    p = _write(tmp_path, "src/repro/frontend/ok.py",
+               "from typing import TYPE_CHECKING\n"
+               "if TYPE_CHECKING:\n"
+               "    import jax\n"
+               "def f():\n"
+               "    import jax.numpy as jnp\n"
+               "    return jnp\n")
+    assert lint_file(p, tmp_path) == []
+
+
+def test_trace_record_without_device_id_is_flagged(tmp_path):
+    p = _write(tmp_path, "src/repro/core/rec.py",
+               "from repro.core.accounting import OffloadRecord\n"
+               "def f(**kw):\n"
+               "    return OffloadRecord(op='gemm', **kw)\n")
+    assert lint_file(p, tmp_path) == []        # **kwargs may carry it
+    p2 = _write(tmp_path, "src/repro/core/rec2.py",
+                "from repro.core.accounting import OffloadRecord\n"
+                "def f():\n"
+                "    return OffloadRecord(op='gemm')\n")
+    assert rules_of(lint_file(p2, tmp_path)) == {"trace-record-device-id"}
+
+
+def test_parse_error_is_reported_not_raised(tmp_path):
+    p = _write(tmp_path, "src/repro/models/broken.py", "def f(:\n")
+    assert rules_of(lint_file(p, tmp_path)) == {"parse-error"}
+
+
+@settings(max_examples=8)
+@given(st.sampled_from(["getattr", "hasattr"]), st.text(min_size=1, max_size=6))
+def test_probe_rule_tracks_jax_aliases(fn, alias):
+    import keyword
+
+    if not alias.isidentifier() or keyword.iskeyword(alias):
+        alias = "j_" + alias
+    src = f"import jax as {alias}\nX = {fn}({alias}, 'vmap', None)\n"
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        root = pathlib.Path(d)
+        p = _write(root, "src/repro/core/x.py", src)
+        assert rules_of(lint_file(p, root)) == {"no-jax-probe-outside-compat"}
+
+
+# ---------------------------------------------------------------------------
+# registry closure on a seeded broken tree
+# ---------------------------------------------------------------------------
+
+_BLAS = """
+def register(op): pass
+class OffloadOp: pass
+def pallas_lowering(name): pass
+register(OffloadOp(name="gemm"))
+register(OffloadOp(name="ghost_op"))
+pallas_lowering("gemm")
+pallas_lowering("missing_row")
+"""
+
+_OPS = """
+PALLAS_LOWERINGS = {"gemm": None}
+"""
+
+_SAMPLES = """
+def _samples(dtype):
+    return {"gemm": None, "stale_op": None}
+"""
+
+
+def test_registry_closure_catches_all_three_breaks(tmp_path):
+    _write(tmp_path, "src/repro/core/blas.py", _BLAS)
+    _write(tmp_path, "src/repro/kernels/ops.py", _OPS)
+    _write(tmp_path, "tests/test_dispatch.py", _SAMPLES)
+    v = check_registry_closure(tmp_path)
+    msgs = "\n".join(x.render() for x in v)
+    assert rules_of(v) == {"registry-closure"}
+    assert "missing_row" in msgs       # pallas fetch with no table row
+    assert "ghost_op" in msgs          # registered op with no parity sample
+    assert "stale_op" in msgs          # sample for an unregistered op
+
+
+def test_run_lint_includes_repo_rules_on_seeded_tree(tmp_path):
+    _write(tmp_path, "src/repro/core/blas.py", _BLAS)
+    _write(tmp_path, "src/repro/kernels/ops.py", _OPS)
+    _write(tmp_path, "tests/test_dispatch.py", _SAMPLES)
+    _write(tmp_path, "src/repro/models/bad.py",
+           "def f(lax, a, b):\n    return lax.dot_general(a, b, None)\n")
+    v = run_lint(tmp_path)
+    assert {"models-no-dot-general", "registry-closure"} <= rules_of(v)

@@ -23,35 +23,25 @@ RNG = jax.random.PRNGKey(0)
 # ---------------------------------------------------------------------------
 
 def test_registry_closure_no_raw_launch_sites_in_models():
-    """Scans src/repro/models/ for the two call-site patterns the seam
-    refactor eliminated — ``*.dot_general(...)`` contractions and bare
-    ``engine().launch(...)`` accounting; any reappearance reopens the seam
-    and fails here (AST-based so docstrings don't trip it)."""
-    import ast
-
+    """The two call-site patterns the seam refactor eliminated —
+    ``*.dot_general(...)`` contractions and bare ``engine().launch(...)``
+    accounting — are now named rules in the shared lint engine
+    (``repro.analysis.lint``); this is a thin assertion that the model zoo
+    stays clean under them."""
     import repro.models
+    from repro.analysis.lint import RULES, lint_file, repo_root
 
-    root = pathlib.Path(repro.models.__file__).parent
+    rules = [r for r in RULES
+             if r.name in ("models-no-dot-general", "models-no-bare-launch")]
+    assert len(rules) == 2, "lint engine must keep both models/ rules"
+    root = repo_root()
     offenders = []
-    for f in sorted(root.glob("*.py")):
-        tree = ast.parse(f.read_text())
-        for node in ast.walk(tree):
-            if not isinstance(node, ast.Call):
-                continue
-            fn = node.func
-            if isinstance(fn, ast.Attribute) and fn.attr == "dot_general":
-                offenders.append((f.name, node.lineno, "dot_general"))
-            if (
-                isinstance(fn, ast.Attribute)
-                and fn.attr == "launch"
-                and isinstance(fn.value, ast.Call)
-                and isinstance(fn.value.func, ast.Name)
-                and fn.value.func.id in ("engine", "_engine")
-            ):
-                offenders.append((f.name, node.lineno, "engine().launch"))
+    for f in sorted(pathlib.Path(repro.models.__file__).parent.glob("*.py")):
+        offenders.extend(lint_file(f, root, rules))
     assert not offenders, (
-        f"raw launch sites reappeared under src/repro/models/: {offenders}; "
-        "register an OffloadOp descriptor instead (core/blas.py)"
+        "raw launch sites reappeared under src/repro/models/: "
+        + "; ".join(v.render() for v in offenders)
+        + " — register an OffloadOp descriptor instead (core/blas.py)"
     )
 
 

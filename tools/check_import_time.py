@@ -26,6 +26,13 @@ MODULES = (
     "repro.frontend.schedule",
     "repro.frontend.api",
     "repro.hnp",
+    # the analysis passes are import-light by the same contract: lint and
+    # verification must be runnable (and fast) without dragging in jax
+    "repro.analysis",
+    "repro.analysis.base",
+    "repro.analysis.graph",
+    "repro.analysis.races",
+    "repro.analysis.lint",
 )
 
 _PROBE = r"""
