@@ -306,6 +306,19 @@ def _smoke_model_forward() -> dict:
     }
 
 
+def _smoke_offered_load() -> dict:
+    """Offered-load sweep: the streaming engine's max-QPS-at-SLO headline.
+
+    Three load points (under / at / 2x the modeled capacity) over one
+    seeded bursty trace, continuous batching vs the lock-step baseline on
+    the identical request population.  Entirely modeled — no model build —
+    so this is cheap despite using the full (non-reduced) arch config.
+    The recorded ``seed`` makes every number replayable bit-for-bit."""
+    from repro.launch.streaming import offered_load_sweep
+
+    return offered_load_sweep("yi-6b", seed=0)
+
+
 def _git_commit() -> str:
     for var in ("GITHUB_SHA", "CI_COMMIT_SHA"):
         if os.environ.get(var):
@@ -355,6 +368,7 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
     frontend = summary["frontend_graph"]
     model_fwd = summary["model_forward"]
     pipelined = summary["pipelined_staging"]
+    stream = summary["offered_load_sweep"]
     entry = {
         "commit": _git_commit(),
         # CI stamps a reproducible time; local runs fall back to wall clock.
@@ -378,6 +392,10 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
                 "pipelined_copy_fraction"
             ],
             "tpu_n2048_vs_max": pipelined["tpu_n2048"]["pipelined_vs_max"],
+            "max_qps_at_slo": stream["max_qps_at_slo"],
+            "stream_vs_lockstep_qps": stream["continuous_vs_lockstep"][
+                "speedup"
+            ],
             "elapsed_s": summary["elapsed_s"],
         },
     }
@@ -414,6 +432,7 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
         "pipelined_staging": _smoke_pipelined_staging(),
         "cluster_scaling": _smoke_cluster_scaling(),
         "serve_makespan": _smoke_serve_makespan(),
+        "offered_load_sweep": _smoke_offered_load(),
         "frontend_graph": _smoke_frontend_graph(),
         "model_forward": _smoke_model_forward(),
     }
@@ -434,6 +453,9 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
         f"cost-aware 8-dev scaling="
         f"{summary['cluster_scaling']['cost-aware_scaling_8dev']:.2f}x, "
         f"pinned-vs-unpinned serve speedup={serve['pinned_speedup']:.2f}x, "
+        f"max QPS at SLO={summary['offered_load_sweep']['max_qps_at_slo']:.0f} "
+        f"(continuous vs lockstep "
+        f"{summary['offered_load_sweep']['continuous_vs_lockstep']['speedup']:.2f}x), "
         f"hnp graph-vs-eager speedup={frontend['modeled_speedup']:.2f}x "
         f"(staging saved={frontend['staging_bytes_saved']:.0f}B), "
         f"model graph-forward speedup={model_fwd['modeled_speedup']:.2f}x "

@@ -220,6 +220,49 @@ def main() -> None:
              - t_graph.total_staged_bytes_charged())
     print(f"staging the graph forward avoided: {saved:.0f} bytes")
 
+    # -----------------------------------------------------------------------
+    # Streaming serve: continuous batching under live traffic.
+    #
+    # `repro.launch.streaming` turns the cluster into a serving front door:
+    # seeded bursty arrivals (two request classes with their own prompt /
+    # output length mixes and deadlines), prefill/decode disaggregation
+    # across lanes (the KV handle migrates d2d from the prefill lane to its
+    # decode slot), continuous batching (slots refill every step as
+    # requests finish — no lock-step batch barrier), and SLO-aware
+    # admission control that sheds load when the modeled queues say TTFT
+    # would blow the budget.  Everything runs on modeled event time —
+    # `make lint` AST-bans wall-clock reads in the engine — so a seed
+    # reproduces the exact event stream.  Below: the same request
+    # population offered at ~0.5x and ~2x estimated capacity.  At low load
+    # nothing queues; past saturation admission rejects the overflow and
+    # the served p99 TTFT stays inside the 250 ms SLO while sustained QPS
+    # holds at the knee — that knee is the bench headline
+    # (max_qps_at_slo in BENCH_offload.json).
+    # -----------------------------------------------------------------------
+    print("\n=== streaming serve: QPS / p99 TTFT at two offered loads ===")
+    from repro.launch.streaming import (
+        StreamConfig,
+        bursty_trace,
+        estimate_capacity,
+        scale_trace,
+        serve_stream,
+    )
+
+    scfg = StreamConfig(num_devices=4, prefill_lanes=1, decode_slots=8)
+    cap = estimate_capacity("yi-6b", scfg)
+    base = bursty_trace(2.0 * cap, 1.0, seed=0)
+    print(f"{'offered':>9s} {'sustained':>9s} {'rejected':>8s} "
+          f"{'ttft p99':>9s} {'tok p99':>8s}  SLO")
+    for util in (0.5, 2.0):
+        rep = serve_stream("yi-6b", scale_trace(base, util / 2.0), config=scfg)
+        p = rep.point_dict()
+        print(f"{p['offered_qps']:7.0f}/s {p['sustained_qps']:7.0f}/s "
+              f"{rep.reject_rate:7.0%} {p['ttft_p99_ms']:7.0f}ms "
+              f"{p['per_token_p99_ms']:6.1f}ms  "
+              f"{'met' if p['meets_slo'] else 'MISSED'}")
+    print(f"(estimated capacity {cap:.0f}/s; past it, admission sheds load "
+          "so the served tail holds the SLO)")
+
 
 if __name__ == "__main__":
     main()

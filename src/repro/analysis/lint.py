@@ -28,7 +28,11 @@ Rules:
   the trace);
 * ``registry-closure`` — repo-level: every ``pallas_lowering("x")`` fetch
   in ``core/blas.py`` has a ``kernels/ops.py`` table row, and the parity
-  suite's sample dict covers exactly the registered ops.
+  suite's sample dict covers exactly the registered ops;
+* ``serve-no-wallclock`` — no ``time.time``/``perf_counter``/``datetime
+  .now`` reads in the streaming-serve cost paths (``launch/streaming.py``,
+  ``launch/costing.py``): the driver is modeled-time only, so same-seed
+  runs stay byte-identical.
 
 Import-light by contract: stdlib only at module scope.
 """
@@ -259,6 +263,80 @@ def _check_import_light(view: FileView) -> List[Violation]:
     return out
 
 
+_WALLCLOCK_CALLS = frozenset({
+    "time", "time_ns", "perf_counter", "perf_counter_ns",
+    "monotonic", "monotonic_ns", "process_time", "process_time_ns",
+})
+
+
+def _time_aliases(tree: ast.AST) -> Set[str]:
+    """Names bound to the ``time`` module (or its clock functions)."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time" or a.name.startswith("time."):
+                    names.add(a.asname or "time")
+        elif isinstance(node, ast.ImportFrom):
+            if (node.module or "") == "time":
+                for a in node.names:
+                    names.add(a.asname or a.name)
+    return names
+
+
+def _check_no_wallclock(view: FileView) -> List[Violation]:
+    """The streaming engine's determinism contract: the driver runs on
+    *modeled* seconds (LaunchTicket event clocks), so two same-seed runs
+    must be byte-identical — one ``time.time()`` in a cost path silently
+    breaks that.  Flag the imports (any wall clock enters through them)
+    and every clock-function call."""
+    out = []
+    for node in ast.walk(view.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time" or a.name.startswith("time."):
+                    out.append(Violation(
+                        "serve-no-wallclock",
+                        "import of the time module in a streaming-serve "
+                        "cost path — the driver is modeled-time only "
+                        "(seeded traces + LaunchTicket event clocks); a "
+                        "wall-clock read breaks same-seed determinism",
+                        view.where(node),
+                    ))
+        elif isinstance(node, ast.ImportFrom):
+            if (node.module or "") == "time":
+                out.append(Violation(
+                    "serve-no-wallclock",
+                    f"from time import {', '.join(a.name for a in node.names)}"
+                    " in a streaming-serve cost path — modeled time only",
+                    view.where(node),
+                ))
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            name = None
+            if (
+                isinstance(fn, ast.Attribute)
+                and fn.attr in _WALLCLOCK_CALLS
+                and _root_name(fn) in _time_aliases(view.tree)
+            ):
+                name = f"{_root_name(fn)}.{fn.attr}"
+            elif (
+                isinstance(fn, ast.Attribute)
+                and fn.attr in ("now", "utcnow", "today")
+                and _root_name(fn) in ("datetime", "date")
+            ):
+                name = f"{_root_name(fn)}.{fn.attr}"
+            if name:
+                out.append(Violation(
+                    "serve-no-wallclock",
+                    f"{name}() wall-clock read in a streaming-serve cost "
+                    "path — timestamps come from modeled LaunchTicket "
+                    "events, never the host clock",
+                    view.where(node),
+                ))
+    return out
+
+
 _TRACE_RECORDS = ("OffloadRecord", "LaunchTicket")
 
 
@@ -434,6 +512,15 @@ RULES = (
         description="OffloadRecord/LaunchTicket constructors carry device_id",
         paths=("src/repro/",),
         check=_check_trace_device_id,
+    ),
+    LintRule(
+        name="serve-no-wallclock",
+        description="no wall-clock reads in the streaming-serve cost paths",
+        paths=(
+            "src/repro/launch/streaming.py",
+            "src/repro/launch/costing.py",
+        ),
+        check=_check_no_wallclock,
     ),
 )
 

@@ -27,7 +27,11 @@ the scheduler that produced them) and reports named violations:
 * ``race/resident-charged-dma`` — a fully-resident launch
   (``resident_fraction >= 1``) charged DMA time it must not pay;
 * ``race/device-mismatch`` — a ticket filed on a device other than the one
-  stamped on it.
+  stamped on it;
+* ``race/slot-refill-before-complete`` — continuous-batching slot refill:
+  a freed decode slot's next launch was issued before the finishing
+  request's ``complete`` event (:func:`check_slot_refills`, over the
+  streaming engine's :class:`~repro.launch.streaming.SlotRefill` records).
 
 Violations carry the offending ticket chain so the report reads as a
 timeline, not a boolean.
@@ -46,6 +50,7 @@ __all__ = [
     "StreamRaceError",
     "assert_race_free",
     "check_cluster",
+    "check_slot_refills",
     "check_ticket_streams",
     "ticket_streams",
 ]
@@ -196,6 +201,33 @@ def check_ticket_streams(streams: Dict[int, List]) -> List[Violation]:
                         _chain(device_id, (si, s), (ti, t)),
                     ))
                 break  # monotone streams make the first launch the witness
+    return out
+
+
+def check_slot_refills(refills: Sequence) -> List[Violation]:
+    """Happens-before over continuous-batching slot refills.
+
+    The streaming engine frees a decode slot when its request's final step
+    retires (the ``complete`` event) and records the lane's next launch as
+    a refill edge.  The invariant: that next launch's *issue* event is
+    at-or-after the freeing completion — issuing into a slot whose previous
+    occupant is still computing would interleave two requests' KV state on
+    one lane.  Duck-typed over anything carrying ``device_id``,
+    ``freed_rids``, ``freed_complete_s``, ``next_rids``, ``refill_issue_s``
+    (the engine's ``SlotRefill`` records), so this pass stays import-light.
+    """
+    out: List[Violation] = []
+    for i, r in enumerate(refills):
+        if r.refill_issue_s < r.freed_complete_s - _TOL:
+            out.append(Violation(
+                "race/slot-refill-before-complete",
+                f"slot refill issued at {r.refill_issue_s:.6g}s while the "
+                f"freed request(s) {list(r.freed_rids)} only complete at "
+                f"{r.freed_complete_s:.6g}s — the next launch "
+                f"({list(r.next_rids)}) would share the lane with a live "
+                "occupant",
+                f"dev{r.device_id}[refill {i}]",
+            ))
     return out
 
 

@@ -291,6 +291,19 @@ class VirtualDevice:
         """Frontier of the later modeled stream (DMA vs compute)."""
         return max(self.dma_free_s, self.compute_free_s)
 
+    def advance_clocks(self, t: float) -> None:
+        """Advance both stream clocks to at least ``t`` (modeled idle gap).
+
+        Streaming consumers live on a wall of *arrival* time: a request that
+        lands at t=5 cannot issue before t=5 even on an idle device.  The
+        gap is pure idleness — clocks only ever move forward, so the
+        happens-before monotonicity checks are unaffected."""
+        t = float(t)
+        if t > self.dma_free_s:
+            self.dma_free_s = t
+        if t > self.compute_free_s:
+            self.compute_free_s = t
+
     def issue(
         self,
         cost: OpCost,
@@ -870,18 +883,52 @@ class HeroCluster:
         residency credit and are drawn to the device holding it; oblivious
         ones (``round-robin``) are not.
         """
+        device_id, bd, _ = self.assign_at(cost, shape_key, handle=handle)
+        return device_id, bd
+
+    def assign_at(
+        self,
+        cost: OpCost,
+        shape_key: str,
+        *,
+        ready_s: float = 0.0,
+        device_id: Optional[int] = None,
+        handle: Optional[DeviceHandle] = None,
+        resident_fraction: Optional[float] = None,
+    ) -> Tuple[int, RegionBreakdown, LaunchTicket]:
+        """Place one unit of work that becomes *ready* at ``ready_s``.
+
+        The streaming serve engine's issue path: identical to
+        :meth:`assign`, but (a) the chosen device's stream clocks are first
+        advanced to ``ready_s`` (a request cannot issue before it arrives —
+        the gap is modeled idleness, never wall clock), (b) the stamped
+        :class:`LaunchTicket` is returned so the caller can read the modeled
+        completion event (``complete_s``) for SLO accounting and queue-depth
+        admission control, and (c) ``device_id``/``resident_fraction`` may
+        be forced (slot-refill launches land on their lane with the weights'
+        residency credit, not the scheduler's choice).
+        """
         key = (
             handle.name if handle is not None and handle.valid else shape_key
         )
-        dev = self._pick(cost, key)
+        if device_id is not None:
+            dev = self.devices[device_id]
+            if not dev.alive:
+                raise RuntimeError(f"cannot assign to failed device {device_id}")
+        else:
+            dev = self._pick(cost, key)
         if not dev.booted:
             dev.boot()
-        bd = dev.breakdown_for(cost, self.policy, key)
-        dev.issue(
-            cost, bd, key,
-            resident_fraction=1.0 if dev.is_resident(key) else 0.0,
-        )
-        return dev.device_id, bd
+        if ready_s > 0.0:
+            dev.advance_clocks(ready_s)
+        if resident_fraction is None:
+            rf = 1.0 if dev.is_resident(key) else 0.0
+            bd = dev.breakdown_for(cost, self.policy, key)
+        else:
+            rf = min(max(float(resident_fraction), 0.0), 1.0)
+            bd = self.policy.score(cost, dev.platform, resident_fraction=rf)
+        ticket = dev.issue(cost, bd, key, resident_fraction=rf)
+        return dev.device_id, bd, ticket
 
     # ---- modeled completion ----------------------------------------------
     def sync(self) -> int:

@@ -34,6 +34,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core import cost_model as cm
 from repro.core.hero import DeviceHandle, engine
+from repro.launch import costing
 from repro.launch.steps import make_serve_step
 from repro.models import build_model
 
@@ -158,32 +159,20 @@ def _cache_nbytes(cache) -> float:
 
 
 def _prefill_cost(prompts: List[List[int]], cfg) -> cm.OpCost:
-    """Modeled prefill workload: every prompt token runs the stack's GEMMs —
-    collapse to one gemm_cost the scheduler can weigh."""
-    tokens = sum(len(p) for p in prompts)
-    d = cfg.d_model
-    return cm.gemm_cost(max(tokens, 1), d, d, 2,
-                        batch=max(cfg.num_layers, 1), op="serve_prefill")
+    """Batch-path adapter over the shared costed-step helper
+    (:mod:`repro.launch.costing`): every prompt token runs the stack's
+    GEMMs, collapsed to one cost the scheduler can weigh."""
+    return costing.prefill_cost(sum(len(p) for p in prompts), cfg)
 
 
 def _decode_cost(
     bsz: int, max_new_tokens: int, cache_bytes: float, cfg
 ) -> cm.OpCost:
-    """Modeled decode workload — *including the KV cache in staged bytes*.
-
-    Decode streams the whole cache every step, so a device already holding
-    it (pinned handle) skips that share of the copy region.  This is the
-    asymmetry the ``cost-aware`` scheduler keys on to route decode batches
-    to the cache-holding device."""
-    tokens = bsz * max_new_tokens
-    d = cfg.d_model
-    base = cm.gemm_cost(max(tokens, 1), d, d, 2,
-                        batch=max(cfg.num_layers, 1), op="serve_decode")
-    return dataclasses.replace(
-        base,
-        staged_bytes=base.staged_bytes + cache_bytes,
-        touched_bytes=base.touched_bytes + cache_bytes,
-    )
+    """Batch-path adapter over :func:`repro.launch.costing.decode_cost` —
+    the whole decode phase's tokens with the KV cache riding staged bytes,
+    the asymmetry the ``cost-aware`` scheduler keys on to route decode
+    batches to the cache-holding device."""
+    return costing.decode_cost(bsz * max_new_tokens, cache_bytes, cfg)
 
 
 def serve_cluster(
@@ -355,12 +344,48 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--devices", type=int, default=1)
-    ap.add_argument("--scheduler", default="least-loaded")
+    ap.add_argument("--scheduler", default="least-loaded",
+                    choices=["round-robin", "least-loaded", "cost-aware"])
+    ap.add_argument("--policy-mode", default="device",
+                    choices=["host", "device", "auto"],
+                    help="offload routing policy for the cluster run")
+    ap.add_argument("--forward-mode", default=None,
+                    choices=["eager", "graph"],
+                    help="decode step forward path (graph = hnp capture)")
     ap.add_argument("--num-batches", type=int, default=1)
     ap.add_argument("--no-pin-caches", action="store_true",
                     help="baseline: caches drain to host between phases")
+    # Streaming mode: the continuous-batching engine over a live arrival
+    # process (fully modeled — no model build, so it runs anywhere fast).
+    ap.add_argument("--stream", action="store_true",
+                    help="run the streaming engine on a bursty trace")
+    ap.add_argument("--qps", type=float, default=100.0,
+                    help="offered load for --stream (requests/s)")
+    ap.add_argument("--duration", type=float, default=1.0,
+                    help="trace duration for --stream (modeled seconds)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    rng = np.random.default_rng(0)
+    if args.stream:
+        from repro.launch.streaming import (
+            StreamConfig, bursty_trace, serve_stream,
+        )
+
+        # 1 prefill lane + >=1 decode lanes; default to the bench's
+        # 4-device split unless the user asked for a bigger cluster.
+        cfg = StreamConfig(
+            num_devices=max(args.devices, 4), scheduler=args.scheduler
+        )
+        trace = bursty_trace(args.qps, args.duration, seed=args.seed)
+        rep = serve_stream(args.arch, trace, config=cfg)
+        o = rep.slo.overall
+        print(f"streaming {args.arch}: offered {rep.offered_qps:.4g} qps "
+              f"-> sustained {rep.sustained_qps:.4g} qps "
+              f"(reject {rep.reject_rate:.1%}, "
+              f"ttft p99 {o.ttft.p99_s * 1e3:.1f}ms, "
+              f"per-token p99 {o.per_token.p99_s * 1e3:.2f}ms, "
+              f"meets SLO: {rep.slo.meets_slo})")
+        return
+    rng = np.random.default_rng(args.seed)
     if args.devices > 1 or args.num_batches > 1:
         from repro.core.hero import offload_policy
 
@@ -369,11 +394,13 @@ def main() -> None:
              for _ in range(args.batch)]
             for _ in range(args.num_batches)
         ]
-        with offload_policy(num_devices=args.devices, scheduler=args.scheduler):
+        with offload_policy(mode=args.policy_mode, num_devices=args.devices,
+                            scheduler=args.scheduler):
             res = serve_cluster(
                 args.arch, batches, max_new_tokens=args.max_new,
                 temperature=args.temperature,
                 pin_caches=not args.no_pin_caches,
+                forward_mode=args.forward_mode,
             )
         print(f"{len(batches)} batches over {args.devices} devices "
               f"({args.scheduler}): prefill={res.prefill_placements} "

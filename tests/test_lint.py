@@ -130,6 +130,41 @@ def test_trace_record_without_device_id_is_flagged(tmp_path):
     assert rules_of(lint_file(p2, tmp_path)) == {"trace-record-device-id"}
 
 
+def test_wallclock_in_streaming_is_flagged(tmp_path):
+    p = _write(tmp_path, "src/repro/launch/streaming.py",
+               "import time\n"
+               "def drive():\n"
+               "    return time.time()\n")
+    v = lint_file(p, tmp_path)
+    assert rules_of(v) == {"serve-no-wallclock"}
+    # both the import and the clock read are named
+    assert len(v) == 2
+    p2 = _write(tmp_path, "src/repro/launch/costing.py",
+                "from time import perf_counter\n"
+                "def cost():\n"
+                "    return perf_counter()\n")
+    assert "serve-no-wallclock" in rules_of(lint_file(p2, tmp_path))
+
+
+def test_wallclock_rule_catches_aliases_and_datetime(tmp_path):
+    p = _write(tmp_path, "src/repro/launch/streaming.py",
+               "import time as _t\n"
+               "from datetime import datetime\n"
+               "def f():\n"
+               "    return _t.perf_counter(), datetime.now()\n")
+    v = lint_file(p, tmp_path)
+    assert rules_of(v) == {"serve-no-wallclock"}
+    msgs = "\n".join(x.render() for x in v)
+    assert "perf_counter" in msgs and "datetime.now" in msgs
+
+
+def test_wallclock_rule_scoped_to_streaming_paths(tmp_path):
+    # serve.py's wall-clock reads time real jit execution — out of scope
+    p = _write(tmp_path, "src/repro/launch/serve.py",
+               "import time\nT0 = time.time()\n")
+    assert lint_file(p, tmp_path) == []
+
+
 def test_parse_error_is_reported_not_raised(tmp_path):
     p = _write(tmp_path, "src/repro/models/broken.py", "def f(:\n")
     assert rules_of(lint_file(p, tmp_path)) == {"parse-error"}

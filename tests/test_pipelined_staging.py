@@ -409,6 +409,10 @@ def _fake_summary(**over):
             "tpu_large_n_steady": {"pipelined_copy_fraction": 0.34},
             "tpu_n2048": {"pipelined_vs_max": 1.01},
         },
+        "offered_load_sweep": {
+            "max_qps_at_slo": 174.0,
+            "continuous_vs_lockstep": {"speedup": 1.42},
+        },
         "elapsed_s": 1.0,
     }
     base.update(over)

@@ -1,0 +1,311 @@
+"""Streaming serve engine (``repro.launch.streaming``).
+
+Property-style coverage for the ISSUE 8 invariants: same-seed determinism
+(identical event streams, no wall-clock reads), admission control (rejected
+requests never reach a device timeline), the decode slot pool bound, p99
+monotonicity in offered load, the slot-refill happens-before edge (paired
+with its ``race/slot-refill-before-complete`` rule), and the headline
+acceptance — continuous batching beating the lock-step baseline on the
+same bursty trace.  Everything runs on modeled time with the full (non
+reduced) arch config: no model is built, so these are fast.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis.races import (
+    check_slot_refills,
+    check_ticket_streams,
+)
+from repro.core import accounting
+from repro.launch.streaming import (
+    SLO,
+    ArrivalTrace,
+    StreamConfig,
+    bursty_trace,
+    estimate_capacity,
+    offered_load_sweep,
+    poisson_trace,
+    replay_trace,
+    scale_trace,
+    serve_lockstep,
+    serve_stream,
+)
+
+ARCH = "yi-6b"
+
+
+def small_cfg(**kw) -> StreamConfig:
+    return StreamConfig(**{"num_devices": 4, "prefill_lanes": 1,
+                           "decode_slots": 8, **kw})
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+def test_generators_are_seed_deterministic():
+    a = poisson_trace(80.0, 1.0, seed=3)
+    b = poisson_trace(80.0, 1.0, seed=3)
+    assert a.requests == b.requests
+    c = poisson_trace(80.0, 1.0, seed=4)
+    assert c.requests != a.requests
+    x = bursty_trace(80.0, 1.0, seed=3)
+    y = bursty_trace(80.0, 1.0, seed=3)
+    assert x.requests == y.requests
+
+
+def test_bursty_trace_is_bursty_but_rate_matched():
+    t = bursty_trace(100.0, 2.0, seed=0, burst_factor=3.0,
+                     burst_fraction=0.3, period_s=0.25)
+    # average rate lands near the requested qps
+    assert 0.7 * 100.0 < t.offered_qps < 1.3 * 100.0
+    # arrival density inside burst windows beats the quiet windows
+    hot = sum(1 for r in t.requests if (r.arrival_s % 0.25) / 0.25 < 0.3)
+    cold = len(t.requests) - hot
+    assert hot / 0.3 > cold / 0.7
+
+
+def test_scale_trace_preserves_population_and_compresses_time():
+    base = bursty_trace(50.0, 1.0, seed=1)
+    hot = scale_trace(base, 2.0)
+    assert len(hot.requests) == len(base.requests)
+    for r0, r1 in zip(base.requests, hot.requests):
+        assert (r1.prompt_len, r1.output_len, r1.req_class) == (
+            r0.prompt_len, r0.output_len, r0.req_class
+        )
+        assert r1.arrival_s == pytest.approx(r0.arrival_s / 2.0)
+        # deadline budget rides along unchanged
+        if r0.deadline_s:
+            assert r1.deadline_s - r1.arrival_s == pytest.approx(
+                r0.deadline_s - r0.arrival_s
+            )
+    assert hot.offered_qps == pytest.approx(2.0 * base.offered_qps)
+
+
+def test_replay_trace_sorts_and_stamps_deadlines():
+    t = replay_trace([(0.5, 8, 4), (0.1, 16, 2)], deadline_budget_s=1.0)
+    assert [r.arrival_s for r in t.requests] == [0.1, 0.5]
+    assert t.requests[0].deadline_s == pytest.approx(1.1)
+
+
+def test_stream_config_validation():
+    with pytest.raises(ValueError):
+        StreamConfig(admission="bogus")
+    with pytest.raises(ValueError):
+        StreamConfig(num_devices=2, prefill_lanes=2)
+
+
+# ---------------------------------------------------------------------------
+# determinism: the regression the seed satellite asks for
+# ---------------------------------------------------------------------------
+
+def test_same_seed_runs_produce_identical_event_streams():
+    trace = bursty_trace(100.0, 0.6, seed=11)
+    r1 = serve_stream(ARCH, trace, config=small_cfg())
+    r2 = serve_stream(ARCH, trace, config=small_cfg())
+    assert r1.events == r2.events
+    assert r1.point_dict() == r2.point_dict()
+    assert [len(v) for v in r1.ticket_log.values()] == [
+        len(v) for v in r2.ticket_log.values()
+    ]
+
+
+def test_different_seed_changes_the_event_stream():
+    r1 = serve_stream(ARCH, bursty_trace(100.0, 0.6, seed=11),
+                      config=small_cfg())
+    r2 = serve_stream(ARCH, bursty_trace(100.0, 0.6, seed=12),
+                      config=small_cfg())
+    assert r1.events != r2.events
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def overload_trace(seed=0, duration=0.6):
+    cap = estimate_capacity(ARCH, small_cfg())
+    return bursty_trace(3.0 * cap, duration, seed=seed)
+
+
+def test_rejected_requests_never_appear_in_device_timelines():
+    cfg = small_cfg(admission="queue", max_queue=4)
+    rep = serve_stream(ARCH, overload_trace(), config=cfg)
+    rejected = [m for m in rep.metrics if not m.admitted]
+    assert rejected, "overload with a 4-deep queue must shed load"
+    keys = {
+        t.shape_key for stream in rep.ticket_log.values() for t in stream
+    }
+    for m in rejected:
+        assert f"prefill-{m.rid}" not in keys
+        assert f"kv-{m.rid}" not in keys
+        assert m.tokens_out == 0
+        assert m.first_token_s == 0.0
+        assert not m.completed
+
+
+def test_slo_admission_sheds_load_and_protects_the_tail():
+    rep = serve_stream(ARCH, overload_trace(), config=small_cfg())
+    assert rep.reject_rate > 0.0
+    # backpressure is the mechanism that keeps the *served* population
+    # inside SLO at 3x overload
+    assert rep.slo.meets_slo, rep.slo.as_dict()
+
+
+def test_admission_none_serves_everything():
+    rep = serve_stream(
+        ARCH, bursty_trace(60.0, 0.5, seed=2),
+        config=small_cfg(admission="none"),
+    )
+    assert rep.rejected == 0
+    assert rep.completed == rep.admitted == len(rep.metrics)
+
+
+# ---------------------------------------------------------------------------
+# slot pool + refill happens-before
+# ---------------------------------------------------------------------------
+
+def test_decode_slots_never_exceed_pool_size():
+    cfg = small_cfg(num_devices=2, decode_slots=4)   # single decode lane
+    rep = serve_stream(ARCH, bursty_trace(80.0, 0.6, seed=5), config=cfg)
+    assert 0 < rep.max_active_slots <= 4
+    multi = small_cfg(decode_slots=6)
+    rep2 = serve_stream(ARCH, bursty_trace(150.0, 0.6, seed=5), config=multi)
+    assert rep2.max_active_slots <= 6 * (multi.num_devices - multi.prefill_lanes)
+
+
+def test_slot_refill_issued_at_or_after_freeing_complete():
+    rep = serve_stream(ARCH, bursty_trace(120.0, 0.8, seed=7),
+                       config=small_cfg())
+    assert rep.slot_refills, "a busy run must exercise the refill path"
+    for r in rep.slot_refills:
+        assert r.refill_issue_s >= r.freed_complete_s - 1e-9
+    assert check_slot_refills(rep.slot_refills) == []
+
+
+def test_slot_refill_race_rule_fires_on_corrupted_edge():
+    rep = serve_stream(ARCH, bursty_trace(120.0, 0.5, seed=7),
+                       config=small_cfg())
+    bad = dataclasses.replace(
+        rep.slot_refills[0],
+        refill_issue_s=rep.slot_refills[0].freed_complete_s - 1e-3,
+    )
+    violations = check_slot_refills([bad])
+    assert [v.rule for v in violations] == ["race/slot-refill-before-complete"]
+
+
+def test_streaming_ticket_streams_are_race_free():
+    rep = serve_stream(ARCH, bursty_trace(120.0, 0.8, seed=9),
+                       config=small_cfg())
+    violations = check_ticket_streams(rep.ticket_log)
+    assert violations == [], "\n".join(v.render() for v in violations)
+    # disaggregation really ran: prefill lane issued prefills, decode
+    # lanes issued steps and received kv migrations
+    kinds = {t.kind for s in rep.ticket_log.values() for t in s}
+    assert "d2d" in kinds and "launch" in kinds
+
+
+def test_adaptive_controller_stays_in_bounds():
+    rep = serve_stream(ARCH, overload_trace(seed=3), config=small_cfg())
+    assert 1 <= rep.min_slot_target <= small_cfg().decode_slots
+
+
+# ---------------------------------------------------------------------------
+# latency properties
+# ---------------------------------------------------------------------------
+
+def test_p99_ttft_monotone_non_decreasing_in_offered_load():
+    # fixed seed, identical population, admission and adaptivity off:
+    # more offered load can only deepen queues
+    cfg = small_cfg(admission="none", adaptive=False)
+    cap = estimate_capacity(ARCH, cfg)
+    base = bursty_trace(1.5 * cap, 1.0, seed=0)
+    p99s = []
+    for u in (0.4, 0.8, 1.5):
+        rep = serve_stream(ARCH, scale_trace(base, u / 1.5), config=cfg)
+        p99s.append(rep.slo.overall.ttft.p99_s)
+    assert p99s[0] <= p99s[1] + 1e-9
+    assert p99s[1] <= p99s[2] + 1e-9
+
+
+def test_request_metrics_are_causally_ordered():
+    rep = serve_stream(ARCH, bursty_trace(90.0, 0.5, seed=4),
+                       config=small_cfg())
+    for m in rep.metrics:
+        if not m.completed:
+            continue
+        assert m.arrival_s <= m.prefill_done_s <= m.first_token_s <= m.finish_s
+        assert m.tokens_out == m.output_len
+        assert len(m.token_latencies_s) == m.output_len - 1
+        assert all(lat > 0 for lat in m.token_latencies_s)
+
+
+# ---------------------------------------------------------------------------
+# the headline: continuous batching vs lock-step on the same trace
+# ---------------------------------------------------------------------------
+
+def test_continuous_beats_lockstep_on_same_bursty_trace():
+    cfg = small_cfg()
+    cap = estimate_capacity(ARCH, cfg)
+    trace = bursty_trace(2.0 * cap, 1.0, seed=0)
+    cont = serve_stream(ARCH, trace, config=cfg)
+    lock = serve_lockstep(ARCH, trace, config=cfg)
+    assert cont.sustained_qps >= 1.3 * lock.sustained_qps
+    # lock-step's batch-forming wait shows up exactly where expected
+    assert lock.slo.overall.ttft.p99_s > cont.slo.overall.ttft.p99_s
+
+
+def test_offered_load_sweep_produces_the_bench_section():
+    sweep = offered_load_sweep(ARCH, utils=(0.5, 1.0, 2.0), seed=0)
+    assert len(sweep["points"]) == 3
+    assert sweep["seed"] == 0
+    for p in sweep["points"]:
+        for key in ("sustained_qps", "reject_rate", "ttft_p99_ms",
+                    "per_token_p99_ms"):
+            assert key in p
+    assert sweep["max_qps_at_slo"] > 0
+    assert sweep["continuous_vs_lockstep"]["speedup"] >= 1.3
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting primitives (core/accounting.py additions)
+# ---------------------------------------------------------------------------
+
+def test_percentile_is_linear_interpolation():
+    assert accounting.percentile([], 99) == 0.0
+    assert accounting.percentile([5.0], 50) == 5.0
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert accounting.percentile(vals, 0) == 1.0
+    assert accounting.percentile(vals, 100) == 4.0
+    assert accounting.percentile(vals, 50) == pytest.approx(2.5)
+
+
+def test_slo_report_excludes_rejected_and_classes_roll_up():
+    mk = accounting.RequestMetrics
+    ms = [
+        mk(rid=0, req_class="a", arrival_s=0.0, prompt_len=4, output_len=2,
+           first_token_s=0.1, finish_s=0.2, tokens_out=2,
+           token_latencies_s=[0.1]),
+        mk(rid=1, req_class="b", arrival_s=0.0, prompt_len=4, output_len=2,
+           first_token_s=0.3, finish_s=0.5, tokens_out=2,
+           token_latencies_s=[0.2]),
+        mk(rid=2, req_class="a", arrival_s=0.0, prompt_len=4, output_len=2,
+           admitted=False),
+    ]
+    rep = accounting.slo_report(ms, ttft_slo_s=0.4, per_token_slo_s=0.3)
+    assert set(rep.classes) == {"a", "b", "all"}
+    assert rep.overall.requests == 2          # the rejected one is excluded
+    assert rep.overall.ttft.max_s == pytest.approx(0.3)
+    assert rep.meets_slo
+    tight = accounting.slo_report(ms, ttft_slo_s=0.2)
+    assert not tight.meets_slo
+
+
+def test_lockstep_report_is_well_formed():
+    trace = bursty_trace(60.0, 0.4, seed=1)
+    rep = serve_lockstep(ARCH, trace, config=small_cfg())
+    assert rep.engine == "lockstep"
+    assert rep.completed == len(trace.requests)
+    assert rep.slot_refills == []
+    assert check_ticket_streams(rep.ticket_log) == []

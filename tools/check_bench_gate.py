@@ -9,7 +9,19 @@ pipelined-staging headline (ISSUE 6):
   spends 0.60 of offload time copying there; the pipeline must hide it);
 * tpu-v5e n=2048 cold ``offload_s`` within 15% of ``max(copy, compute)``
   (the acceptance criterion: a shingle, not a sum);
-* ``BENCH_trajectory.jsonl`` has no duplicate (commit, headline-hash) lines.
+
+and the streaming-serve headline (ISSUE 8):
+
+* an ``offered_load_sweep`` section with >= 3 load points, each carrying
+  sustained QPS, TTFT/per-token p50/p95/p99 and the admission reject rate;
+* ``max_qps_at_slo > 0`` — the server sustains at least one load point
+  inside the p99 TTFT/per-token SLO — and the recorded trace ``seed`` is
+  present (the sweep is replayable);
+* continuous batching beats the lock-step baseline by >= 1.3x sustained
+  QPS on the same bursty trace at the knee, and the knee's sustained QPS
+  is >= the best lock-step point;
+* ``BENCH_trajectory.jsonl`` has no duplicate (commit, headline-hash)
+  lines and its latest line carries the serve headline keys.
 
 Run: PYTHONPATH=src:. python tools/check_bench_gate.py [--offload PATH]
      [--trajectory PATH]
@@ -53,6 +65,58 @@ def check_offload(summary: dict) -> list:
     return failures
 
 
+_POINT_KEYS = (
+    "sustained_qps", "reject_rate",
+    "ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms",
+    "per_token_p50_ms", "per_token_p95_ms", "per_token_p99_ms",
+)
+
+
+def check_serve(summary: dict) -> list:
+    failures = []
+    sweep = summary.get("offered_load_sweep")
+    if not sweep:
+        return ["BENCH_offload.json has no offered_load_sweep section"]
+    points = sweep.get("points", [])
+    if len(points) < 3:
+        failures.append(
+            f"offered_load_sweep has {len(points)} load points < 3"
+        )
+    for i, p in enumerate(points):
+        missing = [k for k in _POINT_KEYS if k not in p]
+        if missing:
+            failures.append(
+                f"offered_load_sweep point {i} is missing {missing}"
+            )
+    if "seed" not in sweep:
+        failures.append(
+            "offered_load_sweep records no seed — the sweep is not replayable"
+        )
+    max_qps = sweep.get("max_qps_at_slo", 0.0)
+    if not max_qps or max_qps <= 0:
+        failures.append(
+            "max_qps_at_slo headline missing or zero — no load point met "
+            "the p99 TTFT/per-token SLO"
+        )
+    vs = sweep.get("continuous_vs_lockstep", {})
+    speedup = vs.get("speedup", 0.0)
+    if speedup < 1.3:
+        failures.append(
+            "continuous batching beats lock-step by only "
+            f"{speedup:.3f}x sustained QPS (< 1.3x) on the same bursty trace"
+        )
+    lock_best = max(
+        (p.get("sustained_qps", 0.0) for p in sweep.get("lockstep_points", [])),
+        default=0.0,
+    )
+    if vs.get("continuous_qps", 0.0) < lock_best:
+        failures.append(
+            f"knee sustained QPS {vs.get('continuous_qps', 0.0):.1f} < best "
+            f"lock-step point {lock_best:.1f}"
+        )
+    return failures
+
+
 def check_trajectory(path: str) -> list:
     # Mirror benchmarks.run's dedupe key so the two stay in lockstep.
     from benchmarks.run import _headline_hash
@@ -79,10 +143,10 @@ def check_trajectory(path: str) -> list:
             )
         seen.add(key)
     last = json.loads(lines[-1])
-    if "pipelined_speedup" not in last.get("headline", {}):
-        failures.append(
-            f"{path}: latest headline is missing 'pipelined_speedup'"
-        )
+    for key in ("pipelined_speedup", "max_qps_at_slo",
+                "stream_vs_lockstep_qps"):
+        if key not in last.get("headline", {}):
+            failures.append(f"{path}: latest headline is missing {key!r}")
     return failures
 
 
@@ -99,7 +163,11 @@ def main() -> int:
         print(f"bench gate: cannot load {args.offload}: {e}")
         return 1
 
-    failures = check_offload(summary) + check_trajectory(args.trajectory)
+    failures = (
+        check_offload(summary)
+        + check_serve(summary)
+        + check_trajectory(args.trajectory)
+    )
     if failures:
         print("bench gate FAILED:")
         for msg in failures:
@@ -107,6 +175,7 @@ def main() -> int:
         return 1
 
     pipe = summary["pipelined_staging"]
+    sweep = summary["offered_load_sweep"]
     print(
         "bench gate ok: pipelined_speedup="
         f"{pipe['paper_crossover']['pipelined_speedup']:.2f}x (>=1.3), "
@@ -114,6 +183,9 @@ def main() -> int:
         f"{pipe['tpu_large_n_steady']['pipelined_copy_fraction']:.2f} (<0.6), "
         "n=2048 vs max(copy,compute)="
         f"{pipe['tpu_n2048']['pipelined_vs_max']:.3f}x (<=1.15), "
+        f"max_qps_at_slo={sweep['max_qps_at_slo']:.0f} "
+        f"({len(sweep['points'])} load points, continuous vs lockstep "
+        f"{sweep['continuous_vs_lockstep']['speedup']:.2f}x >=1.3), "
         "trajectory deduped"
     )
     return 0

@@ -8,8 +8,11 @@ Default mode runs the :mod:`repro.analysis.lint` rule engine over
 runs a small ``hnp`` workload on a 4-device modeled cluster with pipelined
 staging + cross-wave prefetch under ``validate=True`` (the graph verifier
 checks every forced graph pre-dispatch), then feeds the resulting
-``LaunchTicket`` event streams to the happens-before race detector.  A
-clean tree must produce zero violations from all three passes.
+``LaunchTicket`` event streams to the happens-before race detector, and
+finally replays the continuous-batching streaming server over a seeded
+bursty trace — its full ticket log through the same checker plus every
+slot-refill edge through ``race/slot-refill-before-complete``.  A clean
+tree must produce zero violations from all passes.
 
 Run:
     PYTHONPATH=src python tools/repro_lint.py [paths...]
@@ -89,6 +92,37 @@ def run_smoke_races() -> int:
         f"repro-lint --smoke-races: clean ({ntickets} tickets on "
         f"{len(streams)} devices, kinds: {'/'.join(kinds)}; graph verifier "
         "ran on every forced graph)"
+    )
+    return run_smoke_stream_races()
+
+
+def run_smoke_stream_races() -> int:
+    """Replay the continuous-batching engine and race-check its streams.
+
+    Exercises the serving-specific invariants end to end: the full
+    per-device ticket log (not the bounded in-flight window) goes through
+    the happens-before checker, and every ``SlotRefill`` edge through the
+    ``race/slot-refill-before-complete`` rule."""
+    from repro.analysis.races import check_slot_refills, check_ticket_streams
+    from repro.launch.streaming import bursty_trace, serve_stream
+
+    trace = bursty_trace(120.0, 0.75, seed=0)
+    report = serve_stream("yi-6b", trace)
+    violations = check_ticket_streams(report.ticket_log)
+    violations += check_slot_refills(report.slot_refills)
+    ntickets = sum(len(ts) for ts in report.ticket_log.values())
+    if violations:
+        print(format_violations(violations))
+        print(
+            f"repro-lint --smoke-races: {len(violations)} violation(s) over "
+            f"the streaming-serve workload ({ntickets} tickets)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"repro-lint --smoke-races: streaming serve clean ({ntickets} "
+        f"tickets, {len(report.slot_refills)} slot-refill edges, "
+        f"{report.completed}/{report.admitted} requests completed)"
     )
     return 0
 
