@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: collect check test bench bench-smoke bench-gate ci frontend import-time lint
+.PHONY: collect check test bench bench-smoke bench-gate ci frontend import-time lint trace trace-smoke
 
 # Frontend import-time gate: every repro.frontend module (and repro.hnp)
 # must import in <1s cold — the lazy layer stays import-light (no
@@ -45,10 +45,23 @@ bench-smoke:
 
 # Headline assertions over the smoke artifacts: pipelined_speedup >= 1.3,
 # tpu-v5e large-n steady copy_fraction < 0.6, n=2048 offload within 15% of
-# max(copy, compute), trajectory free of duplicate headline lines.
+# max(copy, compute), trajectory free of duplicate headline lines, plus the
+# obs contract: trace_smoke.json non-empty with every ticket covered by a
+# span, and a metrics snapshot in BENCH_offload.json.
 bench-gate:
 	PYTHONPATH=src:. $(PYTHON) tools/check_bench_gate.py
 
+# Perfetto trace of the smoke workloads (gemm chain / hnp graph / streaming
+# burst) + top-10 self-time per lane on stdout.  Load trace.json at
+# https://ui.perfetto.dev.
+trace:
+	$(PYTHON) tools/repro_trace.py --smoke --summary -o trace.json
+
+# CI artifact flavor: same capture, no summary, fixed filename the bench
+# gate's check_obs pass reads back.
+trace-smoke:
+	$(PYTHON) tools/repro_trace.py --smoke -o trace_smoke.json
+
 # CI entry point: tier-1 suite, the static-analysis gate, then the perf
-# snapshot + headline gate.
-ci: check lint bench-smoke bench-gate
+# snapshot + trace capture + headline gate.
+ci: check lint bench-smoke trace-smoke bench-gate

@@ -306,6 +306,42 @@ def _smoke_model_forward() -> dict:
     }
 
 
+def _smoke_failover_accounting() -> dict:
+    """Device failure mid-flight: the requeued work must stay on the books.
+
+    Launches a round-robin GEMM burst on 2 devices, kills device 0 with
+    tickets still in flight, and rolls up the trace.  Regression target:
+    ``fail_device``/``resize`` used to move the LaunchTicket but record
+    nothing, so ``by_device()``/``device_timelines()`` silently dropped the
+    re-run compute from the surviving device's busy time.  Now every
+    requeue adds one compute-only record on the survivor (the aborted
+    attempt stays charged to the lost lane), and ``requeued_compute_s``
+    rides the trajectory headline so it can't regress to zero."""
+    from repro.core import gemm_cost, offload_trace
+    from repro.core.hero import HeroCluster
+
+    c = HeroCluster(num_devices=2, scheduler="round-robin")
+    with offload_trace() as t:
+        for i in range(4):
+            c.launch(
+                gemm_cost(512, 512, 512, 2), dtype="bfloat16",
+                shape_key=f"fo{i}",
+            )
+        moved = c.fail_device(0)
+    requeues = [r for r in t.records if r.note.startswith("requeue")]
+    requeued_s = sum(r.regions.compute_s * r.count for r in requeues)
+    timelines = t.device_timelines()
+    return {
+        "tickets_moved": len(moved),
+        "requeue_records": len(requeues),
+        "requeued_compute_s": requeued_s,
+        "survivor_compute_busy_s": timelines[1].compute_busy_s,
+        "by_device_compute_s": {
+            str(dev): agg.compute_s for dev, agg in sorted(t.by_device().items())
+        },
+    }
+
+
 def _smoke_offered_load() -> dict:
     """Offered-load sweep: the streaming engine's max-QPS-at-SLO headline.
 
@@ -396,6 +432,9 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
             "stream_vs_lockstep_qps": stream["continuous_vs_lockstep"][
                 "speedup"
             ],
+            "requeued_compute_s": summary["failover_accounting"][
+                "requeued_compute_s"
+            ],
             "elapsed_s": summary["elapsed_s"],
         },
     }
@@ -426,16 +465,23 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
 
 
 def smoke(out_path: str = "BENCH_offload.json") -> dict:
+    from repro.obs import metrics as obs_metrics
+
     t0 = time.time()
-    summary = {
-        "gemm_sweep": _smoke_gemm_sweep(),
-        "pipelined_staging": _smoke_pipelined_staging(),
-        "cluster_scaling": _smoke_cluster_scaling(),
-        "serve_makespan": _smoke_serve_makespan(),
-        "offered_load_sweep": _smoke_offered_load(),
-        "frontend_graph": _smoke_frontend_graph(),
-        "model_forward": _smoke_model_forward(),
-    }
+    with obs_metrics.collect() as reg:
+        summary = {
+            "gemm_sweep": _smoke_gemm_sweep(),
+            "pipelined_staging": _smoke_pipelined_staging(),
+            "cluster_scaling": _smoke_cluster_scaling(),
+            "serve_makespan": _smoke_serve_makespan(),
+            "offered_load_sweep": _smoke_offered_load(),
+            "frontend_graph": _smoke_frontend_graph(),
+            "model_forward": _smoke_model_forward(),
+            "failover_accounting": _smoke_failover_accounting(),
+        }
+    # every dispatch/stream/serve counter the smoke sections incremented,
+    # rolled flat — the bench gate asserts this snapshot is present
+    summary["metrics"] = reg.rollup()
     summary["elapsed_s"] = time.time() - t0
     with open(out_path, "w") as f:
         json.dump(summary, f, indent=2)
@@ -460,7 +506,11 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
         f"(staging saved={frontend['staging_bytes_saved']:.0f}B), "
         f"model graph-forward speedup={model_fwd['modeled_speedup']:.2f}x "
         f"({model_fwd['fused_launches']} fused launches, "
-        f"staging saved={model_fwd['staging_bytes_saved']:.0f}B) "
+        f"staging saved={model_fwd['staging_bytes_saved']:.0f}B), "
+        f"failover requeued compute="
+        f"{summary['failover_accounting']['requeued_compute_s']:.2e}s over "
+        f"{summary['failover_accounting']['requeue_records']} requeues, "
+        f"{len(summary['metrics'])} metric series "
         f"-> {out_path} ({summary['elapsed_s']:.1f}s)"
     )
     return summary

@@ -263,6 +263,43 @@ def main() -> None:
     print(f"(estimated capacity {cap:.0f}/s; past it, admission sheds load "
           "so the served tail holds the SLO)")
 
+    # -----------------------------------------------------------------------
+    # Seeing where the time goes.
+    #
+    # Everything above ran on modeled clocks, and `repro.obs` can record all
+    # of it: wrap any workload in `span_trace()` and every dispatch, staging
+    # leg, d2d migration, compute window, prefetch and request lifecycle
+    # lands on a per-device lane (`dev0/dma`, `dev0/compute`, ...), exactly
+    # where the two stream clocks put it.  Tracing is observation-only —
+    # with the tracer off the instrumentation is a single `if`, and a
+    # tracer-on run is bitwise-identical (tests/test_obs.py holds us to
+    # that).  `chrome_trace()` exports the span set as Chrome trace-event
+    # JSON: drop the file on https://ui.perfetto.dev and you get the DMA/
+    # compute overlap, flow arrows for KV-cache migrations and slot
+    # refills, and counter tracks (in-flight depth, resident bytes, decode
+    # slot occupancy).  The same run fills the always-on metrics registry —
+    # how often each path fired, labeled and rolled up flat.
+    #
+    # `make trace` captures the full smoke set (eager chain / hnp graph /
+    # streaming burst) and prints the top self-time spans per lane.
+    # -----------------------------------------------------------------------
+    print("\n=== seeing where the time goes: span trace + metrics ===")
+    from repro.obs import metrics, span_trace
+    from repro.obs.trace_export import chrome_trace, summarize, write_trace
+
+    with metrics.collect() as reg:
+        with span_trace("quickstart-serve") as tr:
+            engine().reset()
+            serve_stream("yi-6b", scale_trace(base, 0.25), config=scfg)
+    path = write_trace("quickstart_trace.json", chrome_trace(tr))
+    print(f"{len(tr.spans)} spans on lanes {', '.join(tr.lanes()[:6])}, ... "
+          f"-> {path} (load it at https://ui.perfetto.dev)")
+    print(summarize(tr.spans, top=3))
+    rollup = reg.rollup()
+    for key in sorted(rollup):
+        if key.startswith(("serve.", "dispatch.")):
+            print(f"  {key} = {rollup[key]:.0f}")
+
 
 if __name__ == "__main__":
     main()

@@ -44,7 +44,12 @@ def format_violations(violations: Sequence[Violation]) -> str:
 
 
 class AnalysisError(Exception):
-    """Raised by the ``assert_*`` entry points when violations were found."""
+    """Raised by the ``assert_*`` entry points when violations were found.
+
+    Carries ``flight``: the obs flight recorder's bounded window (last K
+    tickets/spans per device) frozen at raise time next to the violations,
+    so a red analysis run ships its own repro trace.
+    """
 
     def __init__(self, violations: Sequence[Violation], header: str) -> None:
         self.violations: List[Violation] = list(violations)
@@ -53,3 +58,9 @@ class AnalysisError(Exception):
             f"{header}: {n} violation{'s' if n != 1 else ''}\n"
             + format_violations(self.violations)
         )
+        try:
+            from repro.obs import flight
+
+            self.flight = flight.capture(self.violations)
+        except Exception:       # never mask the analysis failure itself
+            self.flight = None

@@ -33,6 +33,10 @@ Rules:
   .now`` reads in the streaming-serve cost paths (``launch/streaming.py``,
   ``launch/costing.py``): the driver is modeled-time only, so same-seed
   runs stay byte-identical.
+* ``obs-modeled-time-only`` — the same wall-clock machinery over the
+  observability layer (``src/repro/obs/``) and its instrumentation call
+  sites (``core/hero.py``, ``core/dispatch.py``, ``frontend/schedule.py``):
+  spans and counters carry modeled timestamps only.
 
 Import-light by contract: stdlib only at module scope.
 """
@@ -284,57 +288,70 @@ def _time_aliases(tree: ast.AST) -> Set[str]:
     return names
 
 
-def _check_no_wallclock(view: FileView) -> List[Violation]:
-    """The streaming engine's determinism contract: the driver runs on
-    *modeled* seconds (LaunchTicket event clocks), so two same-seed runs
-    must be byte-identical — one ``time.time()`` in a cost path silently
-    breaks that.  Flag the imports (any wall clock enters through them)
-    and every clock-function call."""
-    out = []
-    for node in ast.walk(view.tree):
-        if isinstance(node, ast.Import):
-            for a in node.names:
-                if a.name == "time" or a.name.startswith("time."):
+def _no_wallclock_check(rule: str, context: str):
+    """Build a wallclock checker for one rule: the modeled-time contract
+    (two same-seed runs must be byte-identical — one ``time.time()``
+    silently breaks that) is shared by the streaming-serve cost paths
+    (``serve-no-wallclock``) and the observability/instrumentation seams
+    (``obs-modeled-time-only``); only the rule name and the violation's
+    context phrase differ.  Flag the imports (any wall clock enters
+    through them) and every clock-function call."""
+
+    def check(view: FileView) -> List[Violation]:
+        out = []
+        for node in ast.walk(view.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "time" or a.name.startswith("time."):
+                        out.append(Violation(
+                            rule,
+                            f"import of the time module in {context} — "
+                            "the driver is modeled-time only (seeded "
+                            "traces + LaunchTicket event clocks); a "
+                            "wall-clock read breaks same-seed determinism",
+                            view.where(node),
+                        ))
+            elif isinstance(node, ast.ImportFrom):
+                if (node.module or "") == "time":
                     out.append(Violation(
-                        "serve-no-wallclock",
-                        "import of the time module in a streaming-serve "
-                        "cost path — the driver is modeled-time only "
-                        "(seeded traces + LaunchTicket event clocks); a "
-                        "wall-clock read breaks same-seed determinism",
+                        rule,
+                        "from time import "
+                        f"{', '.join(a.name for a in node.names)}"
+                        f" in {context} — modeled time only",
                         view.where(node),
                     ))
-        elif isinstance(node, ast.ImportFrom):
-            if (node.module or "") == "time":
-                out.append(Violation(
-                    "serve-no-wallclock",
-                    f"from time import {', '.join(a.name for a in node.names)}"
-                    " in a streaming-serve cost path — modeled time only",
-                    view.where(node),
-                ))
-        elif isinstance(node, ast.Call):
-            fn = node.func
-            name = None
-            if (
-                isinstance(fn, ast.Attribute)
-                and fn.attr in _WALLCLOCK_CALLS
-                and _root_name(fn) in _time_aliases(view.tree)
-            ):
-                name = f"{_root_name(fn)}.{fn.attr}"
-            elif (
-                isinstance(fn, ast.Attribute)
-                and fn.attr in ("now", "utcnow", "today")
-                and _root_name(fn) in ("datetime", "date")
-            ):
-                name = f"{_root_name(fn)}.{fn.attr}"
-            if name:
-                out.append(Violation(
-                    "serve-no-wallclock",
-                    f"{name}() wall-clock read in a streaming-serve cost "
-                    "path — timestamps come from modeled LaunchTicket "
-                    "events, never the host clock",
-                    view.where(node),
-                ))
-    return out
+            elif isinstance(node, ast.Call):
+                fn = node.func
+                name = None
+                if (
+                    isinstance(fn, ast.Attribute)
+                    and fn.attr in _WALLCLOCK_CALLS
+                    and _root_name(fn) in _time_aliases(view.tree)
+                ):
+                    name = f"{_root_name(fn)}.{fn.attr}"
+                elif (
+                    isinstance(fn, ast.Attribute)
+                    and fn.attr in ("now", "utcnow", "today")
+                    and _root_name(fn) in ("datetime", "date")
+                ):
+                    name = f"{_root_name(fn)}.{fn.attr}"
+                if name:
+                    out.append(Violation(
+                        rule,
+                        f"{name}() wall-clock read in {context} — "
+                        "timestamps come from modeled LaunchTicket "
+                        "events, never the host clock",
+                        view.where(node),
+                    ))
+        return out
+
+    return check
+
+
+_check_no_wallclock = _no_wallclock_check(
+    "serve-no-wallclock", "a streaming-serve cost path")
+_check_obs_modeled_time = _no_wallclock_check(
+    "obs-modeled-time-only", "an observability/instrumentation path")
 
 
 _TRACE_RECORDS = ("OffloadRecord", "LaunchTicket")
@@ -521,6 +538,18 @@ RULES = (
             "src/repro/launch/costing.py",
         ),
         check=_check_no_wallclock,
+    ),
+    LintRule(
+        name="obs-modeled-time-only",
+        description="spans/metrics take timestamps from modeled clocks, "
+                    "never time.* or datetime",
+        paths=(
+            "src/repro/obs/",
+            "src/repro/core/hero.py",
+            "src/repro/core/dispatch.py",
+            "src/repro/frontend/schedule.py",
+        ),
+        check=_check_obs_modeled_time,
     ),
 )
 

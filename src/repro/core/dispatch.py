@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.core.cost_model import OpCost
 from repro.core.hero import DeviceHandle, engine
+from repro.obs import spans as _spans
 
 __all__ = [
     "DeviceHandle",
@@ -196,8 +197,33 @@ def dispatch_placed(
         from repro.analysis.graph import assert_call_valid
 
         assert_call_valid(name, args, kwargs, handle=handle)
+    tr = _spans.current_tracer()
+    if tr is None:
+        return _dispatch_impl(name, args, kwargs, handle,
+                              resident_fraction, None)
+    with tr.span(f"dispatch:{name}", cat="dispatch", lane="host"):
+        return _dispatch_impl(name, args, kwargs, handle,
+                              resident_fraction, tr)
+
+
+def _dispatch_impl(
+    name: str,
+    args: tuple,
+    kwargs: dict,
+    handle: Optional[DeviceHandle],
+    resident_fraction: Optional[float],
+    tr: Optional["_spans.SpanTracer"],
+):
+    """The cost -> plan -> launch -> lower pipeline, with optional phase
+    markers (``tr`` is the active tracer or None — never looked up here,
+    so the traced and untraced paths run the same code)."""
     op = get_op(name)
     cost = op.cost(*args, **kwargs)
+    if tr is not None:
+        tr.instant("cost", cat="dispatch", lane="host",
+                   t=_spans.modeled_now(),
+                   attrs={"op": name, "flops": cost.flops,
+                          "staged_bytes": cost.staged_bytes})
     arrays = [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]
     # Array-valued keyword operands (fused biases, masks) are part of the
     # call's static signature too — key the ledger on them, in name order.
@@ -214,6 +240,11 @@ def dispatch_placed(
         and not op.host_only
         and (op.eligible is None or bool(op.eligible(*args, **kwargs)))
     )
+    if tr is not None:
+        tr.instant("plan", cat="dispatch", lane="host",
+                   t=_spans.modeled_now(),
+                   attrs={"op": name, "planned": plan is not None,
+                          "pallas_eligible": eligible})
     launch = engine().launch(
         cost,
         dtype=str(arrays[0].dtype) if arrays else "",
@@ -224,9 +255,23 @@ def dispatch_placed(
         handle=handle,
         resident_fraction=resident_fraction,
     )
+    if tr is not None:
+        tr.instant("launch", cat="dispatch", lane="host",
+                   t=_spans.modeled_now(),
+                   attrs={"op": name, "backend": str(launch),
+                          "device_id": launch.device_id},
+                   device_id=launch.device_id)
     if plan is not None:
-        return op.plan_lower(plan, *args, **kwargs), launch
-    if launch.backend == "device-pallas":
+        out = op.plan_lower(plan, *args, **kwargs)
+        lowering = "plan"
+    elif launch.backend == "device-pallas":
         out = op.pallas(*args, interpret=engine().policy.interpret, **kwargs)
-        return out, launch
-    return op.host(*args, **kwargs), launch
+        lowering = "pallas"
+    else:
+        out = op.host(*args, **kwargs)
+        lowering = "host"
+    if tr is not None:
+        tr.instant("lower", cat="dispatch", lane="host",
+                   t=_spans.modeled_now(),
+                   attrs={"op": name, "lowering": lowering})
+    return out, launch

@@ -47,6 +47,9 @@ from repro.core.cost_model import (
     pipelined_breakdown,
 )
 from repro.core.platform import CPU_HOST, Platform, TPU_V5E, get_platform
+from repro.obs import flight as _flight
+from repro.obs import metrics as _metrics
+from repro.obs import spans as _spans
 
 __all__ = [
     "DeviceHandle",
@@ -348,6 +351,19 @@ class VirtualDevice:
             device_id=self.device_id,
         )
         self.enqueue(ticket)
+        _flight.note_ticket(ticket)
+        _metrics.counter("stream.tickets", kind=kind).inc()
+        if bd.copy_s > 0 and cost.staged_bytes > 0:
+            charged = cost.staged_bytes * (1.0 - float(resident_fraction))
+            chunks = bd.chunks if isinstance(bd, PipelinedBreakdown) else 1
+            if charged > 0:
+                _metrics.histogram("staging.leg_bytes").observe(
+                    charged / chunks, n=chunks)
+        tr = _spans.current_tracer()
+        if tr is not None:
+            _trace_ticket(tr, ticket, bd)
+            tr.counter(f"dev{self.device_id}/inflight", ticket.issue_s,
+                       float(len(self.inflight)), device_id=self.device_id)
         return ticket
 
     def requeue(self, ticket: LaunchTicket) -> LaunchTicket:
@@ -367,6 +383,13 @@ class VirtualDevice:
             device_id=self.device_id,
         )
         self.enqueue(moved)
+        _flight.note_ticket(moved)
+        _metrics.counter("stream.tickets", kind="requeue").inc()
+        tr = _spans.current_tracer()
+        if tr is not None:
+            _trace_ticket(tr, moved, None)
+            tr.counter(f"dev{self.device_id}/inflight", moved.issue_s,
+                       float(len(self.inflight)), device_id=self.device_id)
         return moved
 
     def breakdown_for(
@@ -402,6 +425,60 @@ class VirtualDevice:
         orphans = list(self.inflight)
         self.inflight.clear()
         return orphans
+
+
+# Cap on per-chunk child spans under one pipelined staging span: keeps the
+# trace readable for multi-hundred-chunk copies (the parent span's attrs
+# carry the exact chunk count either way).
+_MAX_LEG_SPANS = 16
+
+
+def _trace_ticket(
+    tr: "_spans.SpanTracer",
+    ticket: LaunchTicket,
+    bd: Optional[RegionBreakdown],
+) -> None:
+    """Emit the stream-lane span(s) for one stamped ticket.
+
+    Only called with an active tracer.  Spans mirror the ticket's event
+    pairs exactly — DMA window ``[issue_s, copy_done_s]``, compute window
+    ``[compute_start_s, complete_s]`` — and carry the ticket identity in
+    attrs so the ``check_obs`` gate can match every ticket to a span.
+    """
+    dev = ticket.device_id
+    attrs = {
+        "ticket": True,
+        "kind": ticket.kind,
+        "op": ticket.op,
+        "shape_key": ticket.shape_key,
+        "issue_s": ticket.issue_s,
+        "complete_s": ticket.complete_s,
+        "resident_fraction": ticket.resident_fraction,
+    }
+    name = f"{ticket.kind}:{ticket.op}"
+    copy_dur = ticket.copy_done_s - ticket.issue_s
+    if copy_dur > 0:
+        staging = tr.emit(name, cat="stream", lane=f"dev{dev}/dma",
+                          t0=ticket.issue_s, t1=ticket.copy_done_s,
+                          attrs=attrs, device_id=dev)
+        if (isinstance(bd, PipelinedBreakdown) and bd.chunks > 1
+                and bd.copy_s > 0):
+            staging.attrs["chunks"] = bd.chunks
+            if bd.chunks <= _MAX_LEG_SPANS:
+                t = ticket.issue_s
+                rest = max(bd.copy_s - bd.first_copy_leg_s, 0.0)
+                leg = rest / (bd.chunks - 1)
+                for k in range(bd.chunks):
+                    dur = bd.first_copy_leg_s if k == 0 else leg
+                    tr.emit(f"leg{k}", cat="stream", lane=f"dev{dev}/dma",
+                            t0=t, t1=t + dur, parent_id=staging.span_id,
+                            device_id=dev)
+                    t += dur
+    work_dur = ticket.complete_s - ticket.compute_start_s
+    if work_dur > 0 or copy_dur <= 0:
+        tr.emit(name, cat="stream", lane=f"dev{dev}/compute",
+                t0=ticket.compute_start_s, t1=ticket.complete_s,
+                attrs=attrs, device_id=dev)
 
 
 # ---------------------------------------------------------------------------
@@ -539,8 +616,39 @@ class HeroCluster:
             target = self._pick(cost, t.shape_key)
             if not target.booted:
                 target.boot()
+            old_dev = t.device_id
             target.requeue(t)
+            self._record_requeue(t, old_dev, target.device_id)
         return moves
+
+    def _record_requeue(self, ticket: LaunchTicket, old_dev: int,
+                        new_dev: int) -> None:
+        """Account a rescheduled orphan on its surviving device.
+
+        The original launch record keeps the aborted attempt on the lost
+        lane; the re-execution charges its compute once, on the survivor —
+        with no copy/fork-join regions, matching ``VirtualDevice.requeue``
+        which occupies only the compute stream.  Without this record,
+        ``OffloadTrace.summary()`` / ``device_timelines()`` silently
+        dropped requeued work from the busy-time rollups.
+        """
+        accounting.record(
+            accounting.OffloadRecord(
+                op=ticket.op,
+                shape_key=ticket.shape_key,
+                dtype="",
+                backend="device",
+                cost=OpCost(op=ticket.op, flops=0.0, staged_bytes=0.0,
+                            touched_bytes=0.0),
+                regions=RegionBreakdown(
+                    copy_s=0.0, fork_join_s=0.0,
+                    compute_s=ticket.offload_s, host_s=0.0,
+                ),
+                zero_copy=self.policy.zero_copy,
+                note=f"requeue {old_dev}->{new_dev}",
+                device_id=new_dev,
+            )
+        )
 
     def set_scheduler(self, name: str) -> None:
         if name not in SCHEDULERS:
@@ -629,7 +737,19 @@ class HeroCluster:
         handle = DeviceHandle(name=name, device_id=dev.device_id,
                               nbytes=float(nbytes))
         self._handles[name] = handle
+        self._note_resident_bytes(dev.device_id)
         return handle
+
+    def _note_resident_bytes(self, device_id: int) -> None:
+        """Counter-track sample of pinned bytes on one device (traced runs
+        only — a single guarded call at every residency transition)."""
+        tr = _spans.current_tracer()
+        if tr is None or not (0 <= device_id < len(self.devices)):
+            return
+        total = sum(h.nbytes for h in self.handles_on(device_id))
+        tr.counter(f"dev{device_id}/resident_bytes",
+                   self.devices[device_id].stream_makespan_s, total,
+                   device_id=device_id)
 
     def handle(self, name: str) -> Optional[DeviceHandle]:
         return self._handles.get(name)
@@ -647,15 +767,19 @@ class HeroCluster:
         """
         if self._handles.get(handle.name) is not handle:
             raise KeyError(f"unknown handle {handle.name!r}")
+        old_dev = handle.device_id
         if handle.valid and handle.device_id < len(self.devices):
             self.devices[handle.device_id].evict(handle.name)
         handle.device_id = HOST_DEVICE_ID
+        self._note_resident_bytes(old_dev)
 
     def release_handle(self, handle: DeviceHandle) -> None:
+        old_dev = handle.device_id
         if handle.valid and handle.device_id < len(self.devices):
             self.devices[handle.device_id].evict(handle.name)
         self._handles.pop(handle.name, None)
         handle.device_id = HOST_DEVICE_ID
+        self._note_resident_bytes(old_dev)
 
     def migrate_handle(
         self, handle: DeviceHandle, device_id: int
@@ -684,7 +808,18 @@ class HeroCluster:
             dst.boot()
         dst.mark_resident(handle.name)
         cost = d2d_cost(handle.nbytes)
-        dst.issue(cost, bd, handle.name, kind="d2d")
+        ticket = dst.issue(cost, bd, handle.name, kind="d2d")
+        tr = _spans.current_tracer()
+        if tr is not None:
+            # Arrow from the source lane to the receiving DMA window: the
+            # bytes leave where the handle lived and land on dst's stream.
+            tr.flow(f"d2d:{handle.name}", cat="stream",
+                    src_lane=f"dev{handle.device_id}/compute",
+                    src_t=ticket.issue_s,
+                    dst_lane=f"dev{device_id}/dma",
+                    dst_t=ticket.copy_done_s,
+                    attrs={"nbytes": handle.nbytes,
+                           "src": handle.device_id, "dst": device_id})
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op, shape_key=handle.name, dtype="",
@@ -694,7 +829,10 @@ class HeroCluster:
                 device_id=device_id,
             )
         )
+        old_dev = handle.device_id
         handle.device_id = device_id
+        self._note_resident_bytes(old_dev)
+        self._note_resident_bytes(device_id)
         return bd
 
     def restage_handle(
@@ -821,6 +959,7 @@ class HeroCluster:
             if not target.booted:
                 target.boot()
             target.requeue(t)
+            self._record_requeue(t, device_id, target.device_id)
             moved.append((t, target.device_id))
         return moved
 
@@ -976,6 +1115,7 @@ class HeroCluster:
         )
         if force_host:  # ops compiled host-only (paper: syrk.c)
             bd = pol.score(cost, self.platform, resident_fraction=rf)
+            _metrics.counter("dispatch.calls", op=cost.op).inc()
             accounting.record(
                 accounting.OffloadRecord(
                     op=cost.op, shape_key=shape_key, dtype=dtype,
@@ -1021,6 +1161,9 @@ class HeroCluster:
             backend = "device-pallas"
         else:
             backend = "device"
+        _metrics.counter("dispatch.calls", op=cost.op).inc()
+        if offload:
+            _metrics.counter("dispatch.offloaded", op=cost.op).inc()
         accounting.record(
             accounting.OffloadRecord(
                 op=cost.op,

@@ -35,6 +35,7 @@ from repro.frontend.lazy import (
     is_heavy,
     rebuild_call,
 )
+from repro.obs import spans as _obs
 
 __all__ = [
     "GraphReport",
@@ -719,8 +720,25 @@ def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
             if deps[c.id] == 0:
                 frontier.append(c.id)
 
+    tr = _obs.current_tracer()
+    graph_span = None
+    if tr is not None:
+        graph_span = tr.begin(
+            f"graph:{region.name}", cat="graph", lane="host",
+            t0=_obs.modeled_now(),
+            attrs={"nodes": len(order), "eliminated": eliminated,
+                   "fused_chains": len(chains)},
+        )
+    wave_idx = 0
     while ready:
         wave = [by_id[i] for i in sorted(ready)]
+        wave_span = None
+        if tr is not None:
+            wave_span = tr.begin(
+                f"wave{wave_idx}", cat="graph", lane="host",
+                t0=_obs.modeled_now(), attrs={"nodes": len(wave)},
+            )
+            wave_idx += 1
         ready = []
         # nodes fused into an earlier head arrive here already evaluated
         pending_heavy: List[Node] = []
@@ -745,11 +763,20 @@ def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
             if len(members) < 2:
                 singles.extend(members)
         for n in sorted(singles, key=lambda n: n.id):
+            if tr is not None and chains.get(n.id):
+                tr.instant("fuse", cat="graph", lane="host",
+                           t=_obs.modeled_now(),
+                           attrs={"head": n.op,
+                                  "fused": len(chains[n.id]) + 1})
             _run_heavy(n, chains, root_ids, region)
             complete(n, ready)
         for key, members in groups.items():
             if len(members) >= 2:
                 members = sorted(members, key=lambda n: n.id)
+                if tr is not None:
+                    tr.instant("gemm-batch", cat="graph", lane="host",
+                               t=_obs.modeled_now(),
+                               attrs={"members": len(members)})
                 _run_batched(members, chains, root_ids, region)
                 for n in members:
                     complete(n, ready)
@@ -757,6 +784,10 @@ def _schedule(roots: Sequence[Node], region: GraphRegion) -> None:
         # now so the copies shingle under wave k's modeled compute
         if ready:
             _prefetch_next_wave(ready, by_id, region)
+        if tr is not None:
+            tr.end(wave_span, _obs.modeled_now())
+    if tr is not None:
+        tr.end(graph_span, _obs.modeled_now())
 
     leftover = [n for n in order if n.id not in done and not n.evaluated]
     if leftover:  # cycles cannot happen by construction; guard anyway

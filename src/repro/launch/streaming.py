@@ -54,6 +54,8 @@ from repro.core import accounting
 from repro.core.hero import DeviceHandle, HeroCluster, LaunchTicket
 from repro.core.platform import TPU_V5E, Platform
 from repro.launch import costing
+from repro.obs import metrics as _obs_metrics
+from repro.obs import spans as _obs_spans
 
 __all__ = [
     "SLO",
@@ -313,6 +315,10 @@ class StreamReport:
     # Deterministic event trail: (event, modeled_s, id).  Two runs with the
     # same seed must produce identical trails (regression-tested).
     events: List[Tuple[str, float, int]]
+    # Flat obs-metrics rollup scoped to this run (admission counts by
+    # reason, AIMD decisions, ticket kinds...) — rides into point_dict.
+    metrics_rollup: Dict[str, object] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def reject_rate(self) -> float:
@@ -336,6 +342,7 @@ class StreamReport:
             "per_token_p95_ms": round(o.per_token.p95_s * 1e3, 4),
             "per_token_p99_ms": round(o.per_token.p99_s * 1e3, 4),
             "meets_slo": self.slo.meets_slo,
+            "metrics": dict(self.metrics_rollup),
         }
 
 
@@ -393,6 +400,11 @@ class _StreamSim:
         self._weight_handles: List[DeviceHandle] = []
         self._heap: List[Tuple[float, int, str, int]] = []
         self._seq = 0
+        # Observability: tracer captured once (a sim is single-use); the
+        # request-lifecycle asyncs still open at drain time get closed at
+        # the final makespan so exported traces always pair begin/end.
+        self._tr = _obs_spans.current_tracer()
+        self._open_reqs: List[int] = []
 
     # -- plumbing -----------------------------------------------------------
 
@@ -461,21 +473,22 @@ class _StreamSim:
             cost, self.cfg.platform, resident_fraction=0.0
         ).offload_s
 
-    def _admit(self, req: Request, now: float) -> bool:
+    def _admit(self, req: Request, now: float) -> Tuple[bool, str]:
+        """Admission decision plus the reject reason ("" on admit)."""
         if self.cfg.admission == "none":
-            return True
+            return True, ""
         backlog = len(self.ready) + self.inflight_prefills
         if backlog >= self.cfg.max_queue:
-            return False
+            return False, "queue-full"
         if self.cfg.admission == "queue":
-            return True
+            return True, ""
         est = now + self._estimate_ttft(req, now)
         budget = self.cfg.headroom * self.cfg.slo.ttft_s
         if self.cfg.slo.ttft_s > 0 and est > now + budget:
-            return False
+            return False, "ttft-budget"
         if req.deadline_s > 0 and est > req.deadline_s:
-            return False
-        return True
+            return False, "deadline"
+        return True, ""
 
     # -- event handlers -----------------------------------------------------
 
@@ -486,11 +499,26 @@ class _StreamSim:
             prompt_len=req.prompt_len, output_len=req.output_len,
         )
         self.metrics[req.rid] = m
-        if not self._admit(req, now):
+        ok, reason = self._admit(req, now)
+        if not ok:
             m.admitted = False
             self.events.append(("reject", now, req.rid))
+            _obs_metrics.counter("serve.rejected", reason=reason).inc()
+            if self._tr is not None:
+                self._tr.instant(f"reject:{reason}", cat="serve",
+                                 lane="requests", t=now,
+                                 attrs={"rid": req.rid,
+                                        "class": req.req_class})
             return
         self.events.append(("admit", now, req.rid))
+        _obs_metrics.counter("serve.admitted").inc()
+        if self._tr is not None:
+            self._tr.async_begin(f"req{req.rid}", cat="serve",
+                                 lane="requests", t=now, pair_id=req.rid,
+                                 attrs={"class": req.req_class,
+                                        "prompt_len": req.prompt_len,
+                                        "output_len": req.output_len})
+            self._open_reqs.append(req.rid)
         # Prefill on the least-backlogged prefill lane; the request cannot
         # issue before it arrives (assign_at advances the lane clocks).
         lane_id = min(
@@ -518,6 +546,10 @@ class _StreamSim:
         self.inflight_prefills -= 1
         self.ready.append(rid)
         self.events.append(("ready", now, rid))
+        if self._tr is not None:
+            self._tr.async_instant("prefill-done", cat="serve",
+                                   lane="requests", t=now, pair_id=rid)
+            self._tr.counter("ready_queue", now, float(len(self.ready)))
         # Wake any idle lane (one with no step in flight).
         for lane in sorted(self.lanes, key=lambda L: len(L.active)):
             if not lane.stepping:
@@ -533,10 +565,16 @@ class _StreamSim:
                 # KV migrates from its prefill lane at-or-after `now`
                 # (slots it fills were freed at `now` at the earliest).
                 self.cluster.devices[lane.device_id].advance_clocks(now)
+                src_dev = handle.device_id
                 self.cluster.migrate_handle(handle, lane.device_id)
                 self._log_ticket(
                     self.cluster.devices[lane.device_id].inflight[-1]
                 )
+                if self._tr is not None:
+                    self._tr.async_instant(
+                        "kv-migrate", cat="serve", lane="requests", t=now,
+                        pair_id=rid,
+                        attrs={"src": src_dev, "dst": lane.device_id})
             lane.active.append(rid)
             refilled.append(rid)
         if not lane.active:
@@ -568,7 +606,20 @@ class _StreamSim:
                 next_rids=tuple(refilled),
                 refill_issue_s=ticket.issue_s,
             ))
+            if self._tr is not None:
+                # Arrow from the freeing completion to the refilled step.
+                self._tr.flow(
+                    "slot-refill", cat="serve",
+                    src_lane=f"dev{lane.device_id}/compute", src_t=freed_t,
+                    dst_lane=f"dev{lane.device_id}/compute",
+                    dst_t=ticket.issue_s,
+                    attrs={"freed": list(freed_rids),
+                           "next": list(refilled)})
             lane.last_freed = None
+        if self._tr is not None:
+            self._tr.counter(
+                "decode_slots_active", ticket.issue_s,
+                float(sum(len(L.active) for L in self.lanes)))
         lane.stepping = True
         lane.step_issue_s = ticket.issue_s
         lane.steps += 1
@@ -583,6 +634,10 @@ class _StreamSim:
             if m.tokens_out == 1:
                 m.first_token_s = now
                 self.events.append(("first_token", now, rid))
+                if self._tr is not None:
+                    self._tr.async_instant("first-token", cat="serve",
+                                           lane="requests", t=now,
+                                           pair_id=rid)
             else:
                 m.token_latencies_s.append(now - self.last_token_s[rid])
             self.last_token_s[rid] = now
@@ -594,6 +649,11 @@ class _StreamSim:
             lane.active.remove(rid)
             self.cluster.release_handle(self.kv_handles.pop(rid))
             self.events.append(("finish", now, rid))
+            if self._tr is not None:
+                self._tr.async_end(f"req{rid}", cat="serve",
+                                   lane="requests", t=now, pair_id=rid,
+                                   attrs={"tokens": m.tokens_out})
+                self._open_reqs.remove(rid)
         if finished:
             lane.last_freed = (tuple(finished), now)
         if self.cfg.adaptive:
@@ -601,14 +661,25 @@ class _StreamSim:
             # when steps are back to back — shrink the width target hard
             # when it exceeds the budget, regrow it additively.
             step_s = now - lane.step_issue_s
+            before = lane.slot_target
             if step_s > self.cfg.slo.per_token_s > 0:
                 lane.slot_target = max(
                     1, int(lane.slot_target * self.cfg.aimd_decrease)
                 )
+                _obs_metrics.counter("serve.aimd",
+                                     decision="decrease").inc()
             else:
                 lane.slot_target = min(
                     lane.slots, lane.slot_target + self.cfg.aimd_increase
                 )
+            if self._tr is not None and lane.slot_target != before:
+                decision = ("aimd-decrease" if lane.slot_target < before
+                            else "aimd-increase")
+                self._tr.instant(
+                    decision, cat="serve", lane="aimd", t=now,
+                    attrs={"device": lane.device_id, "step_s": step_s,
+                           "slot_target": lane.slot_target,
+                           "was": before})
             self.min_slot_target = min(self.min_slot_target, lane.slot_target)
         self._refill_and_step(lane, now)
 
@@ -617,21 +688,35 @@ class _StreamSim:
     def run(self) -> StreamReport:
         self._pin_weights()
         lane_by_id = {lane.device_id: lane for lane in self.lanes}
-        try:
-            for req in self.trace.requests:
-                self._push(req.arrival_s, "arrival", req.rid)
-            while self._heap:
-                t, _, kind, ident = heapq.heappop(self._heap)
-                if kind == "arrival":
-                    self._on_arrival(self.requests[ident])
-                elif kind == "prefill_done":
-                    self._on_prefill_done(ident, t)
-                else:
-                    self._on_step_done(lane_by_id[ident], t)
-            self.cluster.sync()
-        finally:
-            self._release_all()
-        return self._report()
+        with _obs_metrics.collect() as reg:
+            try:
+                for req in self.trace.requests:
+                    self._push(req.arrival_s, "arrival", req.rid)
+                while self._heap:
+                    t, _, kind, ident = heapq.heappop(self._heap)
+                    if kind == "arrival":
+                        self._on_arrival(self.requests[ident])
+                    elif kind == "prefill_done":
+                        self._on_prefill_done(ident, t)
+                    else:
+                        self._on_step_done(lane_by_id[ident], t)
+                self.cluster.sync()
+            finally:
+                self._release_all()
+        if self._tr is not None and self._open_reqs:
+            # Requests still mid-decode when the trace drained: close their
+            # lifecycle tracks at the run's modeled frontier so exported
+            # traces always pair async begin/end.
+            end_t = max((d.stream_makespan_s for d in self.cluster.devices),
+                        default=0.0)
+            for rid in self._open_reqs:
+                self._tr.async_end(f"req{rid}", cat="serve",
+                                   lane="requests", t=end_t, pair_id=rid,
+                                   attrs={"drained": True})
+            self._open_reqs.clear()
+        rep = self._report()
+        rep.metrics_rollup = reg.rollup()
+        return rep
 
     def _report(self) -> StreamReport:
         ms = [self.metrics[r.rid] for r in self.trace.requests

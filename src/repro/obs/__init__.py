@@ -1,0 +1,39 @@
+"""repro.obs — observability over the modeled runtime.
+
+Four pieces, all on modeled time (never wall clock):
+
+* :mod:`repro.obs.spans` — zero-cost-when-disabled span tracer
+  (``span_trace()`` / ``current_tracer()`` / ``@traced``).
+* :mod:`repro.obs.trace_export` — Chrome trace-event JSON export
+  (Perfetto-loadable) of spans + raw ticket streams.
+* :mod:`repro.obs.metrics` — process-local counters/gauges/histograms
+  with labeled flat rollups (``obs.counter("dispatch.offloaded").inc()``).
+* :mod:`repro.obs.flight` — bounded last-K-per-device flight recorder,
+  dumped automatically when an analysis rule fires.
+
+Stdlib-only at module scope: the core runtime and the frontend import
+this package from their hot seams, so it must stay as cheap to import
+as it is to leave disabled.
+"""
+
+from repro.obs.metrics import collect, counter, gauge, histogram, snapshot
+from repro.obs.spans import (
+    SpanTracer,
+    current_tracer,
+    modeled_now,
+    span_trace,
+    traced,
+)
+
+__all__ = [
+    "SpanTracer",
+    "collect",
+    "counter",
+    "current_tracer",
+    "gauge",
+    "histogram",
+    "modeled_now",
+    "snapshot",
+    "span_trace",
+    "traced",
+]

@@ -1,0 +1,319 @@
+"""repro.obs — span tracing, trace export, metrics, flight recorder.
+
+The design contract under test (ISSUE 9):
+
+* tracing is observation-only: a tracer-on run is bitwise-identical to a
+  tracer-off run (results AND the streaming event trail);
+* spans nest well on their lanes and export to valid Chrome trace-event
+  JSON (paired flows/asyncs, non-negative ts/dur);
+* the flight recorder keeps an exact last-K window per device and rides
+  ``AnalysisError`` when a rule fires;
+* metrics fan out to every stacked ``collect()`` scope and roll up to a
+  flat JSON-able dict;
+* the ``obs-modeled-time-only`` lint rule patrols the instrumented files;
+* requeued tickets stay on the accounting books (the ISSUE 9 bugfix).
+"""
+
+import collections
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import blas, offload_trace
+from repro.core.cost_model import gemm_cost
+from repro.core.hero import HeroCluster, LaunchTicket, engine, offload_policy
+from repro.obs import flight, metrics, spans, trace_export
+
+
+@pytest.fixture(autouse=True)
+def _reset_engine():
+    engine().reset()
+    yield
+    engine().reset()
+
+
+def _chain():
+    rng = np.random.default_rng(0)
+    a = np.asarray(rng.normal(size=(128, 128)), np.float32)
+    b = np.asarray(rng.normal(size=(128, 128)), np.float32)
+    with offload_policy(mode="device", num_devices=2, pipeline_staging=True):
+        engine().reset()
+        y = blas.gemm(a, b)
+        y = blas.gemm(np.asarray(y), b)
+    return np.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def serve_tracer():
+    """One traced streaming-burst run shared by the export tests."""
+    from repro.launch.streaming import bursty_trace, serve_stream
+
+    engine().reset()
+    with spans.span_trace("serve") as tr:
+        rep = serve_stream("yi-6b", bursty_trace(60.0, 0.5, seed=0))
+    engine().reset()
+    return tr, rep
+
+
+# ---------------------------------------------------------------------------
+# Observation-only contract
+# ---------------------------------------------------------------------------
+
+def test_tracer_on_is_bitwise_identical_and_off_records_nothing():
+    assert spans.current_tracer() is None
+    idle = spans.SpanTracer("idle")         # constructed but never installed
+    y_off = _chain()
+    assert idle.spans == [] and idle.counters == []
+    with spans.span_trace("on") as tr:
+        y_on = _chain()
+    assert tr.spans and tr.counters          # instrumentation fired
+    assert np.array_equal(y_off, y_on)       # ...and changed nothing
+    assert spans.current_tracer() is None
+
+
+def test_streaming_event_trail_identical_with_tracer_on(serve_tracer):
+    from repro.launch.streaming import bursty_trace, serve_stream
+
+    _, rep_on = serve_tracer
+    engine().reset()
+    rep_off = serve_stream("yi-6b", bursty_trace(60.0, 0.5, seed=0))
+    assert rep_off.events == rep_on.events
+    assert rep_off.completed == rep_on.completed
+
+
+# ---------------------------------------------------------------------------
+# Lane structure
+# ---------------------------------------------------------------------------
+
+def test_spans_are_ordered_and_nest_within_same_lane_parents():
+    with spans.span_trace("t") as tr:
+        _chain()
+    by_id = {s.span_id: s for s in tr.spans}
+    slices = [s for s in tr.spans if s.kind == spans.KIND_SPAN]
+    assert slices
+    assert any(s.lane.endswith("/dma") for s in slices)
+    assert any(s.lane.endswith("/compute") for s in slices)
+    for s in slices:
+        assert s.t1_s >= s.t0_s
+        p = by_id.get(s.parent_id) if s.parent_id is not None else None
+        if p is not None and p.kind == spans.KIND_SPAN and p.lane == s.lane:
+            assert s.t0_s >= p.t0_s - 1e-9
+            assert s.t1_s <= p.t1_s + 1e-9
+
+
+def test_dispatch_phase_instants_parent_under_dispatch_span():
+    with spans.span_trace("t") as tr:
+        _chain()
+    by_id = {s.span_id: s for s in tr.spans}
+    phases = [s for s in tr.spans if s.kind == spans.KIND_INSTANT
+              and s.name in ("cost", "plan", "launch", "lower")]
+    assert phases
+    for ph in phases:
+        assert ph.parent_id is not None
+        assert by_id[ph.parent_id].name.startswith("dispatch:")
+
+
+def test_end_closes_abandoned_inner_opens():
+    tr = spans.SpanTracer("t")
+    outer = tr.begin("outer", "c", "host", 0.0)
+    tr.begin("inner", "c", "host", 1.0)       # never explicitly ended
+    tr.end(outer, 5.0)
+    names = {s.name: s for s in tr.spans}
+    assert names["inner"].t1_s == 5.0
+    assert names["inner"].parent_id == names["outer"].span_id
+    assert tr._stack == []
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_is_valid_and_json_round_trips(serve_tracer):
+    tr, _ = serve_tracer
+    trace = trace_export.chrome_trace(tr, meta={"run": "test"})
+    assert trace_export.validate_chrome_trace(trace) == []
+    assert trace["run"] == "test"
+    back = json.loads(json.dumps(trace))
+    assert back["traceEvents"] == trace["traceEvents"]
+    for ev in back["traceEvents"]:
+        assert "ph" in ev
+        if ev["ph"] == "M":
+            continue
+        assert ev["ts"] >= 0
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+
+
+def test_flow_and_async_events_pair_up(serve_tracer):
+    tr, _ = serve_tracer
+    def count(kind):
+        return collections.Counter(
+            s.pair_id for s in tr.spans if s.kind == kind)
+    assert count(spans.KIND_FLOW_S) and \
+        count(spans.KIND_FLOW_S) == count(spans.KIND_FLOW_F)
+    # every request lifecycle opened is closed (drain closes stragglers)
+    assert count(spans.KIND_ASYNC_B) and \
+        count(spans.KIND_ASYNC_B) == count(spans.KIND_ASYNC_E)
+
+
+def test_counter_tracks_export_as_C_events(serve_tracer):
+    tr, _ = serve_tracer
+    assert tr.counters
+    trace = trace_export.chrome_trace(tr)
+    cs = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    assert cs
+    assert all(isinstance(e["args"], dict) for e in cs)
+
+
+def test_self_time_subtracts_direct_children():
+    tr = spans.SpanTracer("t")
+    parent = tr.emit("p", "c", "lane", 0.0, 10.0)
+    tr.emit("k", "c", "lane", 2.0, 5.0, parent_id=parent.span_id)
+    st = trace_export.self_time(tr.spans)
+    assert st["lane"]["p"] == pytest.approx(7.0)
+    assert st["lane"]["k"] == pytest.approx(3.0)
+    assert "p" in trace_export.summarize(tr.spans)
+
+
+def test_validator_catches_unpaired_flow():
+    tr = spans.SpanTracer("t")
+    tr.emit("half-flow", "c", "lane", 1.0, 1.0,
+            kind=spans.KIND_FLOW_S, pair_id=99)
+    trace = trace_export.chrome_trace(tr)
+    assert trace_export.validate_chrome_trace(trace) != []
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_keeps_exact_last_k_and_rides_analysis_errors():
+    from repro.analysis.races import StreamRaceError, assert_race_free
+
+    flight.configure(4)
+    try:
+        c = HeroCluster(num_devices=1)
+        for i in range(7):
+            c.launch(gemm_cost(512, 512, 512, 2), dtype="bfloat16",
+                     shape_key=f"k{i}")
+        bad = LaunchTicket(
+            op="gemm", shape_key="bad", offload_s=1.0, issue_s=0.0,
+            copy_ready_s=5.0, copy_done_s=6.0, compute_start_s=1.0,
+            complete_s=2.0, device_id=0,
+        )
+        with pytest.raises(StreamRaceError) as ei:
+            assert_race_free({0: [bad]})
+        fl = ei.value.flight
+        assert fl is not None and fl["capacity"] == 4
+        window = fl["tickets"]["0"]
+        assert [t["shape_key"] for t in window] == ["k3", "k4", "k5", "k6"]
+        assert fl["violations"]
+    finally:
+        flight.configure(flight.DEFAULT_CAPACITY)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_labels_rollup_and_nested_collect_scopes():
+    with metrics.collect() as outer:
+        metrics.counter("hits", dev="0").inc()
+        with metrics.collect() as inner:
+            metrics.counter("hits", dev="0").inc(2.0)
+            metrics.gauge("depth").set(7)
+            metrics.histogram("lat", op="gemm").observe(1.0)
+            metrics.histogram("lat", op="gemm").observe(3.0, n=3.0)
+        metrics.counter("hits", dev="1").inc()
+    r = outer.rollup()
+    assert r["hits{dev=0}"] == 3.0
+    assert r["hits{dev=1}"] == 1.0
+    assert r["depth"] == 7.0
+    assert r["lat{op=gemm}.count"] == 4.0
+    assert r["lat{op=gemm}.sum"] == 10.0
+    assert r["lat{op=gemm}.min"] == 1.0
+    assert r["lat{op=gemm}.max"] == 3.0
+    assert json.loads(json.dumps(r)) == r      # JSON-able as-is
+    ri = inner.rollup()
+    assert ri["hits{dev=0}"] == 2.0            # only its own scope's events
+    assert "hits{dev=1}" not in ri
+
+
+def test_stream_report_carries_metrics_rollup(serve_tracer):
+    _, rep = serve_tracer
+    point = rep.point_dict()
+    assert point["metrics"]
+    assert any(k.startswith("serve.admitted") for k in point["metrics"])
+
+
+def test_dispatch_and_stream_counters_fire():
+    with metrics.collect() as reg:
+        _chain()
+    r = reg.rollup()
+    assert r.get("dispatch.calls{op=gemm}", 0) >= 2
+    assert r.get("stream.tickets{kind=launch}", 0) >= 2
+
+
+# ---------------------------------------------------------------------------
+# obs-modeled-time-only lint rule
+# ---------------------------------------------------------------------------
+
+def test_obs_modeled_time_rule_fires_on_wallclock(tmp_path):
+    from repro.analysis.lint import lint_file
+
+    p = tmp_path / "src" / "repro" / "obs" / "bad.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import time\ndef now():\n    return time.time()\n")
+    v = lint_file(p, tmp_path)
+    assert {x.rule for x in v} == {"obs-modeled-time-only"}
+    # ...and patrols the instrumented call sites, not just repro/obs
+    p2 = tmp_path / "src" / "repro" / "core" / "dispatch.py"
+    p2.parent.mkdir(parents=True)
+    p2.write_text("from datetime import datetime\nT = datetime.now()\n")
+    assert "obs-modeled-time-only" in {x.rule for x in lint_file(p2, tmp_path)}
+
+
+# ---------------------------------------------------------------------------
+# Requeue accounting (the ISSUE 9 bugfix)
+# ---------------------------------------------------------------------------
+
+def _burst(cluster):
+    for i in range(4):
+        cluster.launch(gemm_cost(512, 512, 512, 2), dtype="bfloat16",
+                       shape_key=f"r{i}")
+
+
+def test_requeued_compute_stays_on_the_accounting_books():
+    # control: same burst, no failure
+    c2 = HeroCluster(num_devices=2, scheduler="round-robin")
+    with offload_trace() as t2:
+        _burst(c2)
+    base_compute = t2.by_device()[1].compute_s
+    base_busy = t2.device_timelines()[1].compute_busy_s
+
+    c = HeroCluster(num_devices=2, scheduler="round-robin")
+    with offload_trace() as t:
+        _burst(c)
+        moved = c.fail_device(0)
+    assert moved and all(dev == 1 for _, dev in moved)
+
+    requeues = [r for r in t.records if r.note.startswith("requeue")]
+    assert len(requeues) == len(moved)
+    requeued = sum(r.regions.compute_s for r in requeues)
+    assert requeued > 0
+    for r in requeues:
+        assert r.backend == "device" and r.device_id == 1
+        assert r.op == "gemm"                  # op survives the move
+        assert r.regions.copy_s == 0.0         # compute charged exactly once,
+        assert r.regions.fork_join_s == 0.0    # no phantom re-staging
+
+    # the survivor's rollups grew by exactly the requeued compute
+    # (previously: the move recorded nothing and this delta was zero)
+    assert t.by_device()[1].compute_s == pytest.approx(
+        base_compute + requeued)
+    assert t.device_timelines()[1].compute_busy_s == pytest.approx(
+        base_busy + requeued)
+    # the aborted attempts stay charged to the lost lane
+    assert t.by_device()[0].compute_s == pytest.approx(
+        t2.by_device()[0].compute_s)

@@ -413,6 +413,7 @@ def _fake_summary(**over):
             "max_qps_at_slo": 174.0,
             "continuous_vs_lockstep": {"speedup": 1.42},
         },
+        "failover_accounting": {"requeued_compute_s": 1.1e-4},
         "elapsed_s": 1.0,
     }
     base.update(over)

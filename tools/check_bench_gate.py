@@ -21,10 +21,18 @@ and the streaming-serve headline (ISSUE 8):
   QPS on the same bursty trace at the knee, and the knee's sustained QPS
   is >= the best lock-step point;
 * ``BENCH_trajectory.jsonl`` has no duplicate (commit, headline-hash)
-  lines and its latest line carries the serve headline keys.
+  lines and its latest line carries the serve headline keys;
+
+and the observability contract (ISSUE 9):
+
+* ``trace_smoke.json`` (from ``make trace-smoke``) loads, is non-empty,
+  and its embedded ``repro_obs`` coverage says every LaunchTicket the
+  smoke workloads issued has a matching span — no silent blind spots in
+  the instrumentation;
+* ``BENCH_offload.json`` carries a non-empty ``metrics`` snapshot.
 
 Run: PYTHONPATH=src:. python tools/check_bench_gate.py [--offload PATH]
-     [--trajectory PATH]
+     [--trajectory PATH] [--trace PATH]
 
 Exit code 0 = gate holds; 1 = regression (each failure printed).
 """
@@ -150,10 +158,40 @@ def check_trajectory(path: str) -> list:
     return failures
 
 
+def check_obs(summary: dict, trace_path: str) -> list:
+    failures = []
+    try:
+        with open(trace_path) as f:
+            trace = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"cannot load {trace_path}: {e} — did `make trace-smoke` run?"]
+    if not trace.get("traceEvents"):
+        failures.append(f"{trace_path} has no traceEvents")
+    obs = trace.get("repro_obs", {})
+    cov = obs.get("coverage", {})
+    if cov.get("tickets", 0) <= 0:
+        failures.append(
+            f"{trace_path} covers zero LaunchTickets — the smoke workloads "
+            "issued nothing (or coverage metadata is missing)"
+        )
+    if cov.get("uncovered_tickets", 1) != 0:
+        failures.append(
+            f"{trace_path}: {cov.get('uncovered_tickets')} ticket(s) have no "
+            "matching span — instrumentation has a blind spot"
+        )
+    if not summary.get("metrics"):
+        failures.append(
+            "BENCH_offload.json has no metrics snapshot — the registry "
+            "rollup is not reaching the bench artifacts"
+        )
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--offload", default="BENCH_offload.json")
     ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
+    ap.add_argument("--trace", default="trace_smoke.json")
     args = ap.parse_args()
 
     try:
@@ -167,6 +205,7 @@ def main() -> int:
         check_offload(summary)
         + check_serve(summary)
         + check_trajectory(args.trajectory)
+        + check_obs(summary, args.trace)
     )
     if failures:
         print("bench gate FAILED:")
@@ -186,7 +225,7 @@ def main() -> int:
         f"max_qps_at_slo={sweep['max_qps_at_slo']:.0f} "
         f"({len(sweep['points'])} load points, continuous vs lockstep "
         f"{sweep['continuous_vs_lockstep']['speedup']:.2f}x >=1.3), "
-        "trajectory deduped"
+        "trajectory deduped, trace covered + metrics snapshot present"
     )
     return 0
 

@@ -33,6 +33,13 @@ MODULES = (
     "repro.analysis.graph",
     "repro.analysis.races",
     "repro.analysis.lint",
+    # the observability layer is imported from the core hot seams and the
+    # frontend; it must stay stdlib-only at module scope
+    "repro.obs",
+    "repro.obs.spans",
+    "repro.obs.metrics",
+    "repro.obs.flight",
+    "repro.obs.trace_export",
 )
 
 _PROBE = r"""

@@ -33,6 +33,18 @@ sys.path.insert(
 
 from repro.analysis.base import format_violations  # noqa: E402
 
+FLIGHT_DUMP = "flight_dump.json"
+
+
+def _dump_flight(violations) -> None:
+    """A red dynamic-pass run ships its own repro trace: freeze the obs
+    flight recorder's bounded ticket/span window next to the violations."""
+    from repro.obs import flight
+
+    path = flight.dump(FLIGHT_DUMP, violations)
+    print(f"repro-lint: flight recorder window dumped to {path}",
+          file=sys.stderr)
+
 
 def run_rules(paths) -> int:
     from repro.analysis.lint import RULES, repo_root, run_lint
@@ -81,6 +93,7 @@ def run_smoke_races() -> int:
     ntickets = sum(len(ts) for ts in streams.values())
     if violations:
         print(format_violations(violations))
+        _dump_flight(violations)
         print(
             f"repro-lint --smoke-races: {len(violations)} violation(s) over "
             f"{ntickets} tickets",
@@ -113,6 +126,7 @@ def run_smoke_stream_races() -> int:
     ntickets = sum(len(ts) for ts in report.ticket_log.values())
     if violations:
         print(format_violations(violations))
+        _dump_flight(violations)
         print(
             f"repro-lint --smoke-races: {len(violations)} violation(s) over "
             f"the streaming-serve workload ({ntickets} tickets)",

@@ -1,0 +1,187 @@
+"""Capture a Perfetto-loadable trace of the smoke workloads (``make trace``).
+
+Runs up to three modeled workloads under one span tracer each — an eager
+GEMM chain, an ``hnp`` graph forward (waves, fusion, prefetch, d2d), and
+a continuous-batching streaming burst — and writes the combined Chrome
+trace-event JSON.  Load the file at https://ui.perfetto.dev (or
+``chrome://tracing``): each workload is one process group; per device you
+get a ``devN/dma`` and a ``devN/compute`` lane, flow arrows join d2d
+migrations and slot refills, and counter tracks show in-flight depth,
+resident bytes and decode slot occupancy.
+
+The trace embeds a ``repro_obs`` section with ticket->span coverage
+(every LaunchTicket the run issued must have a matching span — gated in
+CI by ``tools/check_bench_gate.py --trace``) and the run's metrics
+rollup.
+
+Run:
+    PYTHONPATH=src python tools/repro_trace.py --smoke [--summary]
+    PYTHONPATH=src python tools/repro_trace.py --workload stream -o out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"),
+)
+
+from repro.obs import metrics, spans, trace_export  # noqa: E402
+
+WORKLOADS = ("gemm", "graph", "stream")
+
+
+def _ticket_key(t) -> tuple:
+    return (t.device_id, t.kind, t.op, round(t.issue_s, 9),
+            round(t.complete_s, 9))
+
+
+def _engine_streams():
+    from repro.core import engine
+
+    return {d.device_id: list(d.inflight) for d in engine().devices}
+
+
+def _workload_gemm() -> dict:
+    """Eager BLAS chain on a 2-device cluster (dispatch + stream spans)."""
+    import numpy as np
+
+    from repro.core import blas, engine, offload_policy
+
+    rng = np.random.default_rng(0)
+    a = np.asarray(rng.normal(size=(512, 512)), np.float32)
+    b = np.asarray(rng.normal(size=(512, 512)), np.float32)
+    with offload_policy(mode="device", num_devices=2,
+                        scheduler="round-robin", pipeline_staging=True):
+        engine().reset()
+        y = blas.gemm(a, b)
+        for _ in range(3):
+            y = blas.gemm(np.asarray(y), b)
+        streams = _engine_streams()
+        engine().sync()
+    return streams
+
+
+def _workload_graph() -> dict:
+    """hnp graph forward: waves, fusion, batching, prefetch, d2d."""
+    import numpy as np
+
+    import repro.hnp as hnp
+    from repro.core import engine, offload_policy
+
+    rng = np.random.default_rng(0)
+    x = np.asarray(rng.normal(size=(256, 192)), np.float32)
+    w1 = np.asarray(rng.normal(size=(192, 256)), np.float32)
+    b1 = np.asarray(rng.normal(size=(256,)), np.float32)
+    w2 = np.asarray(rng.normal(size=(256, 128)), np.float32)
+    w3 = np.asarray(rng.normal(size=(256, 128)), np.float32)
+    with offload_policy(mode="device", num_devices=4,
+                        scheduler="cost-aware", prefetch_staging=True):
+        engine().reset()
+        with hnp.offload_region("trace-smoke"):
+            h = hnp.tanh(hnp.linear(hnp.array(x), w1, b1))
+            a = h @ w2
+            b = h @ w3
+            hnp.asnumpy(a + b)
+            hnp.asnumpy(hnp.relu(h) @ w2)
+        streams = _engine_streams()
+        engine().sync()
+    return streams
+
+
+def _workload_stream() -> dict:
+    """Continuous-batching burst: request lifecycles, AIMD, slot refills."""
+    from repro.launch.streaming import bursty_trace, serve_stream
+
+    trace = bursty_trace(80.0, 0.5, seed=0)
+    report = serve_stream("yi-6b", trace)
+    return report.ticket_log
+
+
+_RUNNERS = {
+    "gemm": _workload_gemm,
+    "graph": _workload_graph,
+    "stream": _workload_stream,
+}
+
+
+def capture(workloads) -> tuple:
+    """Run the workloads, each under its own tracer; returns
+    (tracers, coverage dict, metrics rollup)."""
+    tracers = []
+    tickets = collections.Counter()
+    with metrics.collect() as reg:
+        for name in workloads:
+            with spans.span_trace(name) as tr:
+                streams = _RUNNERS[name]()
+            tracers.append(tr)
+            for ts in streams.values():
+                tickets.update(_ticket_key(t) for t in ts)
+    span_keys = collections.Counter(
+        (s.device_id, s.attrs["kind"], s.attrs["op"],
+         round(s.attrs["issue_s"], 9), round(s.attrs["complete_s"], 9))
+        for tr in tracers for s in tr.spans if s.attrs.get("ticket")
+    )
+    uncovered = tickets - span_keys
+    coverage = {
+        "tickets": sum(tickets.values()),
+        "ticket_spans": sum(span_keys.values()),
+        "uncovered_tickets": sum(uncovered.values()),
+        "workloads": list(workloads),
+    }
+    return tracers, coverage, reg.rollup()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run all three smoke workloads (same as default)")
+    ap.add_argument("--workload", choices=("all",) + WORKLOADS,
+                    default="all", help="which workload to trace")
+    ap.add_argument("-o", "--out", default="trace.json",
+                    help="output path (default trace.json)")
+    ap.add_argument("--summary", action="store_true",
+                    help="print top-10 spans by self-time per lane")
+    args = ap.parse_args(argv)
+
+    workloads = WORKLOADS if (args.smoke or args.workload == "all") \
+        else (args.workload,)
+    tracers, coverage, rollup = capture(workloads)
+
+    trace = trace_export.chrome_trace(
+        tracers,
+        meta={"repro_obs": {"coverage": coverage, "metrics": rollup}},
+    )
+    errors = trace_export.validate_chrome_trace(trace)
+    if errors:
+        for e in errors:
+            print(f"repro-trace: INVALID: {e}", file=sys.stderr)
+        return 1
+    if coverage["uncovered_tickets"]:
+        print(
+            f"repro-trace: {coverage['uncovered_tickets']} tickets have no "
+            "matching span", file=sys.stderr,
+        )
+        return 1
+
+    trace_export.write_trace(args.out, trace)
+    nspans = sum(len(tr.spans) for tr in tracers)
+    print(
+        f"repro-trace: {args.out} — {len(trace['traceEvents'])} events, "
+        f"{nspans} spans over {len(tracers)} workload(s), "
+        f"{coverage['tickets']} tickets all covered"
+    )
+    if args.summary:
+        for tr in tracers:
+            print(f"\n== {tr.name}: top spans by self-time ==")
+            print(trace_export.summarize(tr.spans, top=10))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
