@@ -355,6 +355,20 @@ def _smoke_offered_load() -> dict:
     return offered_load_sweep("yi-6b", seed=0)
 
 
+def _smoke_expert_placement() -> dict:
+    """Skewed-router sweep: dynamic expert placement vs static homes.
+
+    Zipfian expert popularity at three skew points over the same seeded
+    router stream; dynamic migrates/replicates hot experts (d2d charged on
+    the DMA stream clocks) while static keeps the contiguous-block homes.
+    The headline ``expert_placement_speedup`` is the modeled-makespan
+    ratio at the gated point s=1.2; every point records its seed and full
+    token conservation (routed = processed + dropped, zero unaccounted)."""
+    from repro.core.placement import placement_sweep
+
+    return placement_sweep(seed=0)
+
+
 def _git_commit() -> str:
     for var in ("GITHUB_SHA", "CI_COMMIT_SHA"):
         if os.environ.get(var):
@@ -432,6 +446,9 @@ def _append_trajectory(summary: dict, path: str = "BENCH_trajectory.jsonl") -> d
             "stream_vs_lockstep_qps": stream["continuous_vs_lockstep"][
                 "speedup"
             ],
+            "expert_placement_speedup": summary["expert_placement"][
+                "expert_placement_speedup"
+            ],
             "requeued_compute_s": summary["failover_accounting"][
                 "requeued_compute_s"
             ],
@@ -478,6 +495,7 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
             "frontend_graph": _smoke_frontend_graph(),
             "model_forward": _smoke_model_forward(),
             "failover_accounting": _smoke_failover_accounting(),
+            "expert_placement": _smoke_expert_placement(),
         }
     # every dispatch/stream/serve counter the smoke sections incremented,
     # rolled flat — the bench gate asserts this snapshot is present
@@ -510,6 +528,9 @@ def smoke(out_path: str = "BENCH_offload.json") -> dict:
         f"failover requeued compute="
         f"{summary['failover_accounting']['requeued_compute_s']:.2e}s over "
         f"{summary['failover_accounting']['requeue_records']} requeues, "
+        f"expert placement dynamic-vs-static="
+        f"{summary['expert_placement']['expert_placement_speedup']:.2f}x "
+        f"@ Zipf s=1.2, "
         f"{len(summary['metrics'])} metric series "
         f"-> {out_path} ({summary['elapsed_s']:.1f}s)"
     )

@@ -264,6 +264,45 @@ def main() -> None:
           "so the served tail holds the SLO)")
 
     # -----------------------------------------------------------------------
+    # When one expert gets famous.
+    #
+    # MoE routing is rarely uniform: under Zipfian popularity one expert
+    # can see 10x its fair share of tokens, and with static homes the lane
+    # that owns it becomes the makespan.  `repro.core.placement` watches
+    # the per-step routed-token histogram (EMA with enter/exit hysteresis)
+    # and *moves the weights to the traffic*: a hot expert's weight triple
+    # migrates d2d to the least-loaded lane when the move amortizes, and a
+    # persistently-hot expert gets a second replica with token-split
+    # dispatch — capacity and token-dropping are explicit policy knobs,
+    # and every dropped token is counted (`moe.tokens_dropped{expert=}`),
+    # never silently lost.  Run it under `span_trace()` and the Perfetto
+    # export shows the story: the `d2d:moe/expert0` flow arrow from the
+    # source lane's compute track to the destination DMA track marks the
+    # migration, the per-expert counter tracks show the drop rate falling
+    # once the replica lands, and the post-move steps visibly rebalance.
+    # `benchmarks.run --smoke` gates this as expert_placement_speedup:
+    # dynamic placement must beat the static homes >= 1.2x at Zipf s=1.2.
+    # -----------------------------------------------------------------------
+    print("\n=== when one expert gets famous: dynamic expert placement ===")
+    from repro.core.placement import run_skewed_workload
+    from repro.obs import span_trace as _span_trace
+    from repro.obs.trace_export import chrome_trace as _chrome_trace
+    from repro.obs.trace_export import write_trace as _write_trace
+
+    stat = run_skewed_workload(zipf_s=1.2, seed=0, dynamic=False, steps=48)
+    with _span_trace("quickstart-placement") as ptr:
+        dyn = run_skewed_workload(zipf_s=1.2, seed=0, dynamic=True, steps=48)
+    print(f"{'':>10s} {'makespan':>10s} {'moves':>6s} {'dropped':>8s}")
+    for label, r in (("static", stat), ("dynamic", dyn)):
+        print(f"{label:>10s} {r.makespan_s*1e3:8.2f}ms "
+              f"{r.migrations + r.replications:6d} {r.tokens_dropped:8d}")
+    print(f"dynamic vs static: {stat.makespan_s / dyn.makespan_s:.2f}x; "
+          f"decisions: {', '.join(d[1] + ':e' + str(d[2]) for d in dyn.decision_log)}")
+    ppath = _write_trace("quickstart_placement_trace.json", _chrome_trace(ptr))
+    print(f"trace -> {ppath}: find the d2d:moe/expert* flow arrow at the "
+          "migration, then compare lane busy-time before/after it")
+
+    # -----------------------------------------------------------------------
     # Seeing where the time goes.
     #
     # Everything above ran on modeled clocks, and `repro.obs` can record all

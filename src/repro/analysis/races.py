@@ -31,7 +31,12 @@ the scheduler that produced them) and reports named violations:
 * ``race/slot-refill-before-complete`` — continuous-batching slot refill:
   a freed decode slot's next launch was issued before the finishing
   request's ``complete`` event (:func:`check_slot_refills`, over the
-  streaming engine's :class:`~repro.launch.streaming.SlotRefill` records).
+  streaming engine's :class:`~repro.launch.streaming.SlotRefill` records);
+* ``race/expert-migrate-before-drain`` — dynamic expert placement: an
+  expert-weight migration's d2d ticket issued while a source-lane launch
+  still reading the handle was in flight (:func:`check_expert_migrations`,
+  over the placement policy's
+  :class:`~repro.core.placement.MigrationEdge` records).
 
 Violations carry the offending ticket chain so the report reads as a
 timeline, not a boolean.
@@ -50,6 +55,7 @@ __all__ = [
     "StreamRaceError",
     "assert_race_free",
     "check_cluster",
+    "check_expert_migrations",
     "check_slot_refills",
     "check_ticket_streams",
     "ticket_streams",
@@ -227,6 +233,36 @@ def check_slot_refills(refills: Sequence) -> List[Violation]:
                 f"({list(r.next_rids)}) would share the lane with a live "
                 "occupant",
                 f"dev{r.device_id}[refill {i}]",
+            ))
+    return out
+
+
+def check_expert_migrations(edges: Sequence) -> List[Violation]:
+    """Happens-before over dynamic expert-weight migrations.
+
+    When the placement policy moves a hot expert's weights between lanes,
+    the d2d copy reads the source-lane buffer that in-flight grouped-FFN
+    launches may still be consuming.  The invariant: the migration ticket's
+    *issue* event is at-or-after the latest ``complete`` of source-lane
+    launches keyed on the handle (the drain fence) — issuing earlier would
+    copy weights out from under a running kernel.  Duck-typed over anything
+    carrying ``expert``, ``handle_name``, ``src_device``, ``dst_device``,
+    ``migrate_issue_s``, ``src_drain_s`` (the policy's ``MigrationEdge``
+    records), so this pass stays import-light.
+    """
+    out: List[Violation] = []
+    for i, e in enumerate(edges):
+        if e.migrate_issue_s < e.src_drain_s - _TOL:
+            out.append(Violation(
+                "race/expert-migrate-before-drain",
+                f"expert {e.expert} weight migration "
+                f"({e.handle_name!r}, dev{e.src_device} -> "
+                f"dev{e.dst_device}) issued its d2d at "
+                f"{e.migrate_issue_s:.6g}s while a source-lane launch still "
+                f"reading the handle completes at {e.src_drain_s:.6g}s — "
+                "the copy would lift weights out from under a running "
+                "kernel",
+                f"dev{e.src_device}[migration {i}]",
             ))
     return out
 

@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import cost_model as cm
-from repro.core.dispatch import OffloadOp, dispatch, register
+from repro.core.dispatch import OffloadOp, dispatch, dispatch_placed, register
 from repro.core.hero import DeviceHandle, engine  # noqa: F401 (re-export seam)
 
 __all__ = [
@@ -55,6 +55,7 @@ __all__ = [
     "qkv_project",
     "ssd_scan",
     "moe_expert_ffn",
+    "moe_expert_ffn_placed",
     "expert_matmul",
     "attention",
     "attention_math",
@@ -1387,6 +1388,27 @@ def moe_expert_ffn(
     dims intact — merging a sharded dim in a reshape forces GSPMD to
     all-gather, so MoE layouts stay (E, G, C, d) through the block."""
     return dispatch("moe_expert_ffn", x, wg, wu, wd, handle=handle)
+
+
+def moe_expert_ffn_placed(
+    x: jax.Array,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    *,
+    placement,
+):
+    """Grouped expert FFN with per-expert placed accounting.
+
+    Same op, same math, same single dispatch graph as
+    :func:`moe_expert_ffn` — but ``placement`` (an
+    ``repro.core.placement.ExpertDispatchPlan``) fans the accounting out
+    into one handle-affine sub-launch per expert copy, charged on the lane
+    its weights live on.  Returns ``(out, launch)`` so callers can read
+    the busiest lane back."""
+    return dispatch_placed(
+        "moe_expert_ffn", x, wg, wu, wd, placement=placement
+    )
 
 
 def decode_attention(

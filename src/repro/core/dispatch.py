@@ -174,6 +174,7 @@ def dispatch_placed(
     handle: Optional[DeviceHandle] = None,
     resident_fraction: Optional[float] = None,
     validate: bool = False,
+    placement: Optional[Any] = None,
     **kwargs,
 ):
     """Graph-aware dispatch entry: like :func:`dispatch`, but returns
@@ -186,6 +187,15 @@ def dispatch_placed(
     operand/result bytes stay device-resident) and reads the placement back
     so the produced intermediate can be pinned where it actually lives and
     its consumers routed (or d2d-migrated) to the data.
+
+    ``placement`` is a per-expert fan-out plan (an
+    ``repro.core.placement.ExpertDispatchPlan``): instead of one whole-op
+    launch, each expert's token block is charged on its home/replica lane
+    via :meth:`~repro.core.hero.HeroCluster.launch_fanout` — all still
+    under this ONE dispatch graph, and the math lowering is exactly the
+    unplaced one, so the placed result is bitwise-equal to the static
+    path.  Under ``mode="host"`` (or an empty plan) the fan-out degrades
+    to the normal single launch.
 
     ``validate=True`` runs the :mod:`repro.analysis.graph` pre-dispatch
     checks on this call — op known, ``handle`` alive and engine-owned,
@@ -200,10 +210,10 @@ def dispatch_placed(
     tr = _spans.current_tracer()
     if tr is None:
         return _dispatch_impl(name, args, kwargs, handle,
-                              resident_fraction, None)
+                              resident_fraction, None, placement)
     with tr.span(f"dispatch:{name}", cat="dispatch", lane="host"):
         return _dispatch_impl(name, args, kwargs, handle,
-                              resident_fraction, tr)
+                              resident_fraction, tr, placement)
 
 
 def _dispatch_impl(
@@ -213,6 +223,7 @@ def _dispatch_impl(
     handle: Optional[DeviceHandle],
     resident_fraction: Optional[float],
     tr: Optional["_spans.SpanTracer"],
+    placement: Optional[Any] = None,
 ):
     """The cost -> plan -> launch -> lower pipeline, with optional phase
     markers (``tr`` is the active tracer or None — never looked up here,
@@ -245,16 +256,32 @@ def _dispatch_impl(
                    t=_spans.modeled_now(),
                    attrs={"op": name, "planned": plan is not None,
                           "pallas_eligible": eligible})
-    launch = engine().launch(
-        cost,
-        dtype=str(arrays[0].dtype) if arrays else "",
-        shape_key=shape_key(*arrays),
-        pallas_eligible=eligible,
-        force_host=op.host_only,
-        note="tp-shard-map" if plan is not None else op.note,
-        handle=handle,
-        resident_fraction=resident_fraction,
+    fanout = (
+        placement is not None
+        and getattr(placement, "sub_launches", ())
+        and not op.host_only
+        and engine().policy.mode != "host"
     )
+    if fanout:
+        # Per-expert sub-launch fan-out under this one dispatch graph: the
+        # plan pre-placed each expert's token block on its handle's lane;
+        # accounting fans out, the lowering below stays the unplaced one.
+        launch = engine().launch_fanout(
+            placement.sub_launches,
+            dtype=str(arrays[0].dtype) if arrays else "",
+            note=f"expert-placed:{name}",
+        )
+    else:
+        launch = engine().launch(
+            cost,
+            dtype=str(arrays[0].dtype) if arrays else "",
+            shape_key=shape_key(*arrays),
+            pallas_eligible=eligible,
+            force_host=op.host_only,
+            note="tp-shard-map" if plan is not None else op.note,
+            handle=handle,
+            resident_fraction=resident_fraction,
+        )
     if tr is not None:
         tr.instant("launch", cat="dispatch", lane="host",
                    t=_spans.modeled_now(),

@@ -52,6 +52,11 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 from repro.configs import get_arch
 from repro.core import accounting
 from repro.core.hero import DeviceHandle, HeroCluster, LaunchTicket
+from repro.core.placement import (
+    ExpertPlacementPolicy,
+    PlacementConfig,
+    zipf_histogram,
+)
 from repro.core.platform import TPU_V5E, Platform
 from repro.launch import costing
 from repro.obs import metrics as _obs_metrics
@@ -263,6 +268,13 @@ class StreamConfig:
     adaptive: bool = True
     aimd_decrease: float = 0.7
     aimd_increase: int = 1
+    # Dynamic expert placement: a PlacementConfig here makes every decode
+    # step feed its routed-token histogram (seeded Zipf skew over the
+    # step's active slots) to an ExpertPlacementPolicy homed on the decode
+    # lanes, so live decode traffic drives expert migration/replication.
+    # None (the default) leaves serve runs byte-identical to before.
+    expert_placement: Optional[PlacementConfig] = None
+    expert_zipf_s: float = 1.2
 
     def __post_init__(self) -> None:
         if self.admission not in ("none", "queue", "slo"):
@@ -319,6 +331,11 @@ class StreamReport:
     # reason, AIMD decisions, ticket kinds...) — rides into point_dict.
     metrics_rollup: Dict[str, object] = dataclasses.field(
         default_factory=dict)
+    # Expert-placement decision identities from this run's decode traffic
+    # ((step, kind, expert, src, dst) keys); empty unless
+    # StreamConfig.expert_placement was set.
+    placement_decisions: List[tuple] = dataclasses.field(
+        default_factory=list)
 
     @property
     def reject_rate(self) -> float:
@@ -405,6 +422,16 @@ class _StreamSim:
         # the final makespan so exported traces always pair begin/end.
         self._tr = _obs_spans.current_tracer()
         self._open_reqs: List[int] = []
+        # Optional dynamic expert placement fed by decode traffic: expert
+        # weights home on the decode lanes; each issued decode step routes
+        # its active-slot tokens through a seeded Zipf histogram.
+        self.placement: Optional[ExpertPlacementPolicy] = None
+        self._moe_rng: Optional[random.Random] = None
+        if cfg.expert_placement is not None:
+            self.placement = ExpertPlacementPolicy(
+                cfg.expert_placement, self.cluster)
+            self.placement.attach([lane.device_id for lane in self.lanes])
+            self._moe_rng = random.Random(trace.seed)
 
     # -- plumbing -----------------------------------------------------------
 
@@ -623,6 +650,20 @@ class _StreamSim:
         lane.stepping = True
         lane.step_issue_s = ticket.issue_s
         lane.steps += 1
+        if self.placement is not None:
+            # This step's tokens (one per active slot) hit the router; the
+            # policy sees the histogram at the step's modeled issue time so
+            # any migrate/replicate d2d lands on the lane clocks after it.
+            hist = zipf_histogram(
+                self._moe_rng, self.placement.cfg.num_experts,
+                self.cfg.expert_zipf_s, len(lane.active),
+            )
+            for d in self.placement.step(hist, now_s=ticket.issue_s):
+                if d.ticket is not None:
+                    self._log_ticket(d.ticket)
+                t_dec = (d.ticket.issue_s if d.ticket is not None
+                         else ticket.issue_s)
+                self.events.append((f"placement-{d.kind}", t_dec, d.expert))
         self._push(ticket.complete_s, "step_done", lane.device_id)
 
     def _on_step_done(self, lane: _Lane, now: float) -> None:
@@ -746,6 +787,10 @@ class _StreamSim:
             slot_refills=self.slot_refills,
             ticket_log=self.ticket_log,
             events=self.events,
+            placement_decisions=(
+                list(self.placement.decision_log)
+                if self.placement is not None else []
+            ),
         )
 
 

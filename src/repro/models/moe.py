@@ -24,19 +24,94 @@ sums the outputs.
 
 from __future__ import annotations
 
+import collections
+import dataclasses
 import math
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import blas
 from repro.models import layers as L
+from repro.obs import metrics as _metrics
 from repro.sharding.annotate import constrain
 
 from repro.compat import shard_map
 
-__all__ = ["init_moe", "moe_ffn", "expert_capacity"]
+__all__ = [
+    "MoEStepTrace",
+    "expert_capacity",
+    "init_moe",
+    "last_moe_step",
+    "moe_ffn",
+    "moe_ffn_placed",
+    "moe_step_trace",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEStepTrace:
+    """One eager MoE dispatch step's routing outcome.
+
+    ``expert_capacity`` overflow used to vanish silently in the packed
+    path (the ``keep`` mask just zeroes the overflow copies); this record
+    keeps the books: per-expert routed/dropped copy counts, the capacity
+    they were clamped to, and the step's ``drop_rate``.  Captured eagerly
+    only — under jit tracing the histogram is abstract and no record is
+    written (the in-graph math never depends on it)."""
+
+    counts: Tuple[int, ...]     # routed token copies per expert
+    capacity: int               # per-(group,expert) slot clamp
+    dropped: Tuple[int, ...]    # copies past capacity, per expert
+    tokens_routed: int
+    tokens_dropped: int
+    drop_rate: float            # tokens_dropped / tokens_routed
+
+
+_MOE_STEPS: collections.deque = collections.deque(maxlen=256)
+
+
+def last_moe_step() -> Optional[MoEStepTrace]:
+    """The most recent eager MoE step record (None before any dispatch)."""
+    return _MOE_STEPS[-1] if _MOE_STEPS else None
+
+
+def moe_step_trace() -> List[MoEStepTrace]:
+    """Recent eager MoE step records, oldest first (bounded window)."""
+    return list(_MOE_STEPS)
+
+
+def _note_moe_step(counts, cap: int) -> None:
+    """Surface the route/pack histogram + dropped-token accounting.
+
+    ``counts`` is the in-graph per-(group,)expert histogram; eagerly it is
+    concrete and the step is recorded (``moe.tokens_dropped{expert=}``
+    counters + a :class:`MoEStepTrace`), under jit it is a tracer and the
+    capture is skipped."""
+    try:
+        c = np.asarray(counts, dtype=np.int64)
+    except Exception:
+        return  # tracing: abstract values never leave the graph
+    c = np.atleast_2d(c)                       # (G, E)
+    hist = c.sum(axis=0)
+    dropped = np.maximum(c - int(cap), 0).sum(axis=0)
+    routed = int(hist.sum())
+    tot_drop = int(dropped.sum())
+    _MOE_STEPS.append(MoEStepTrace(
+        counts=tuple(int(v) for v in hist),
+        capacity=int(cap),
+        dropped=tuple(int(v) for v in dropped),
+        tokens_routed=routed,
+        tokens_dropped=tot_drop,
+        drop_rate=(tot_drop / routed) if routed else 0.0,
+    ))
+    _metrics.counter("moe.tokens_routed").inc(routed)
+    for e_i, d_i in enumerate(dropped):
+        if d_i:
+            _metrics.counter("moe.tokens_dropped", expert=str(e_i)).inc(
+                int(d_i))
 
 
 def expert_capacity(num_tokens: int, cfg) -> int:
@@ -105,6 +180,7 @@ def _moe_global(p, xf, gates, idx, cfg):
     sorted_gate = flat_gate[order]
 
     counts = jnp.sum(jax.nn.one_hot(flat_expert, e, dtype=jnp.int32), axis=0)
+    _note_moe_step(counts, cap)
     starts = jnp.cumsum(counts) - counts
     rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_expert]
     keep = rank < cap
@@ -118,7 +194,17 @@ def _moe_global(p, xf, gates, idx, cfg):
     return jnp.zeros((t, d), xf.dtype).at[sorted_token].add(contrib)
 
 
-def _moe_grouped(p, xf, gates, idx, cfg):
+def _dispatch_groups(t: int, cfg) -> int:
+    """Largest power-of-two group count from ``cfg.dispatch_groups`` that
+    divides ``t`` (shared by the grouped path and the placement-aware
+    wrapper so their capacity arithmetic never drifts)."""
+    g_ = cfg.dispatch_groups if cfg.dispatch_groups > 0 else 1
+    while t % g_:
+        g_ //= 2
+    return max(g_, 1)
+
+
+def _moe_grouped(p, xf, gates, idx, cfg, expert_fn=None):
     """Group-local dispatch (§Perf hillclimb #1).
 
     Tokens are split into G groups aligned with the data shards; the sort,
@@ -127,13 +213,14 @@ def _moe_grouped(p, xf, gates, idx, cfg):
     cross-device traffic is the (G, E) transpose that carries each routed
     token payload to its expert's model-shard and back — the minimal EP
     all-to-all volume (2 · T · k · d bytes globally).
+
+    ``expert_fn`` (default :func:`_expert_mlp`) is the grouped-FFN seam
+    call; the placement-aware path substitutes a placed dispatch with the
+    *same* lowering, so the output is bitwise-identical either way.
     """
     t, d = xf.shape
     k, e = cfg.experts_per_token, cfg.num_experts
-    g_ = cfg.dispatch_groups if cfg.dispatch_groups > 0 else 1
-    while t % g_:
-        g_ //= 2
-    g_ = max(g_, 1)
+    g_ = _dispatch_groups(t, cfg)
     tg = t // g_
     cap_g = expert_capacity(tg, cfg)                      # per-group capacity
 
@@ -148,6 +235,7 @@ def _moe_grouped(p, xf, gates, idx, cfg):
     counts = jnp.sum(
         jax.nn.one_hot(flat_expert, e, dtype=jnp.int32), axis=1
     )                                                     # (G, E)
+    _note_moe_step(counts, cap_g)
     starts = jnp.cumsum(counts, axis=-1) - counts
     rank = (
         jnp.arange(tg * k, dtype=jnp.int32)[None]
@@ -173,7 +261,7 @@ def _moe_grouped(p, xf, gates, idx, cfg):
     # a (data <-> model) all-to-all carrying each routed token once.
     ebuf = buf.reshape(g_, e, cap_g, d).swapaxes(0, 1)         # (E, G, Cg, d)
     ebuf = constrain(ebuf, "model", None, None, None)
-    y = _expert_mlp(p, ebuf)                                   # (E, G, Cg, d)
+    y = (expert_fn or _expert_mlp)(p, ebuf)                    # (E, G, Cg, d)
     y_back = y.swapaxes(0, 1)                                  # all-to-all back
     y_back = constrain(y_back, "dp", None, None, None)
     y_flat = y_back.reshape(g_, e * cap_g, d)                  # unsharded merge
@@ -329,6 +417,62 @@ def moe_ffn(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
         out = _moe_global(p, xf, gates, idx, cfg)
     else:
         out = _moe_grouped(p, xf, gates, idx, cfg)
+    if cfg.dense_residual:
+        out = out + L.mlp_apply(p["dense"], xf, cfg.mlp_kind)
+    return out.reshape(b, s, d), aux_loss
+
+
+def _host_histogram(idx, e: int) -> Optional[List[int]]:
+    """Per-expert routed-copy counts as host ints (None under tracing —
+    placement decisions are host-side and eager-only by design)."""
+    try:
+        flat = np.asarray(idx).reshape(-1)
+    except Exception:
+        return None
+    return [int(v) for v in np.bincount(flat, minlength=e)[:e]]
+
+
+def _expert_mlp_placed(p, eb, plan):
+    """The grouped-FFN seam call with per-expert placed accounting: same
+    op, same lowering, one dispatch graph — only the launch bookkeeping
+    fans out (``dispatch_placed(..., placement=plan)``)."""
+    out, _ = blas.moe_expert_ffn_placed(
+        eb, p["we_gate"], p["we_up"], p["we_down"], placement=plan)
+    return out
+
+
+def moe_ffn_placed(
+    p, x: jax.Array, cfg, policy=None
+) -> Tuple[jax.Array, jax.Array]:
+    """Placement-aware grouped MoE dispatch.  x: (B, S, D) -> (out, aux).
+
+    With ``policy`` (an ``repro.core.placement.ExpertPlacementPolicy``)
+    attached and enabled, the route stage's per-expert token histogram
+    feeds ``policy.step`` (hot experts migrate/replicate d2d, charged on
+    the stream clocks) and the grouped-FFN dispatch fans out per expert
+    onto the lanes their weight handles live on.  The math path is the
+    static grouped dispatch verbatim — with the policy off (or ``None``,
+    or under jit tracing where no host histogram exists) this is
+    *bitwise-equal* to ``moe_ffn(..., moe_dispatch="grouped")``, and with
+    it on only the accounting changes.
+
+    Layer-side dropped-token books (``moe.tokens_dropped{expert=}``, the
+    :class:`MoEStepTrace` drop rate) come from the in-graph histogram via
+    ``_note_moe_step``; the policy's plan is built with ``record=False``
+    so the same drop is never counted twice."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    gates, idx, aux_loss = _router(p, xf, cfg)
+    expert_fn = None
+    if policy is not None and policy.enabled and policy.attached:
+        hist = _host_histogram(idx, cfg.num_experts)
+        if hist is not None:
+            policy.step(hist)
+            g_ = _dispatch_groups(b * s, cfg)
+            cap = expert_capacity((b * s) // g_, cfg) * g_
+            plan = policy.plan(hist, capacity=cap, record=False)
+            expert_fn = lambda pp, eb: _expert_mlp_placed(pp, eb, plan)
+    out = _moe_grouped(p, xf, gates, idx, cfg, expert_fn=expert_fn)
     if cfg.dense_residual:
         out = out + L.mlp_apply(p["dense"], xf, cfg.mlp_kind)
     return out.reshape(b, s, d), aux_loss

@@ -414,6 +414,7 @@ def _fake_summary(**over):
             "continuous_vs_lockstep": {"speedup": 1.42},
         },
         "failover_accounting": {"requeued_compute_s": 1.1e-4},
+        "expert_placement": {"expert_placement_speedup": 1.49},
         "elapsed_s": 1.0,
     }
     base.update(over)

@@ -23,6 +23,16 @@ and the streaming-serve headline (ISSUE 8):
 * ``BENCH_trajectory.jsonl`` has no duplicate (commit, headline-hash)
   lines and its latest line carries the serve headline keys;
 
+and the dynamic expert-placement headline (ISSUE 10):
+
+* an ``expert_placement`` section with >= 3 Zipf skew points, each
+  carrying its recorded seed, on >= 4 lanes;
+* dynamic placement beats static contiguous-block homes by >= 1.2x
+  modeled makespan at Zipf s=1.2 (migration/replication d2d charged on
+  the DMA stream clocks);
+* token conservation at every point: routed = processed + dropped for
+  both the static and dynamic runs — zero unaccounted dropped tokens;
+
 and the observability contract (ISSUE 9):
 
 * ``trace_smoke.json`` (from ``make trace-smoke``) loads, is non-empty,
@@ -125,6 +135,50 @@ def check_serve(summary: dict) -> list:
     return failures
 
 
+def check_expert_placement(summary: dict) -> list:
+    failures = []
+    sec = summary.get("expert_placement")
+    if not sec:
+        return ["BENCH_offload.json has no expert_placement section"]
+    points = sec.get("points", [])
+    if len(points) < 3:
+        failures.append(
+            f"expert_placement has {len(points)} skew points < 3"
+        )
+    if sec.get("num_lanes", 0) < 4:
+        failures.append(
+            f"expert_placement ran on {sec.get('num_lanes', 0)} lanes < 4"
+        )
+    gated = None
+    for i, p in enumerate(points):
+        if "seed" not in p:
+            failures.append(
+                f"expert_placement point {i} records no seed — not replayable"
+            )
+        for side in ("static", "dynamic"):
+            un = p.get(side, {}).get("tokens_unaccounted")
+            if un is None or un != 0:
+                failures.append(
+                    f"expert_placement point {i} ({side}, "
+                    f"s={p.get('zipf_s')}): {un} unaccounted dropped "
+                    "tokens — routed != processed + dropped"
+                )
+        if abs(p.get("zipf_s", 0.0) - 1.2) < 1e-9:
+            gated = p
+    if gated is None:
+        failures.append(
+            "expert_placement has no Zipf s=1.2 point — the gated skew "
+            "regime was not measured"
+        )
+    elif gated.get("speedup", 0.0) < 1.2:
+        failures.append(
+            "dynamic placement beats static by only "
+            f"{gated.get('speedup', 0.0):.3f}x modeled makespan at Zipf "
+            "s=1.2 (< 1.2x)"
+        )
+    return failures
+
+
 def check_trajectory(path: str) -> list:
     # Mirror benchmarks.run's dedupe key so the two stay in lockstep.
     from benchmarks.run import _headline_hash
@@ -152,7 +206,7 @@ def check_trajectory(path: str) -> list:
         seen.add(key)
     last = json.loads(lines[-1])
     for key in ("pipelined_speedup", "max_qps_at_slo",
-                "stream_vs_lockstep_qps"):
+                "stream_vs_lockstep_qps", "expert_placement_speedup"):
         if key not in last.get("headline", {}):
             failures.append(f"{path}: latest headline is missing {key!r}")
     return failures
@@ -204,6 +258,7 @@ def main() -> int:
     failures = (
         check_offload(summary)
         + check_serve(summary)
+        + check_expert_placement(summary)
         + check_trajectory(args.trajectory)
         + check_obs(summary, args.trace)
     )
@@ -225,6 +280,10 @@ def main() -> int:
         f"max_qps_at_slo={sweep['max_qps_at_slo']:.0f} "
         f"({len(sweep['points'])} load points, continuous vs lockstep "
         f"{sweep['continuous_vs_lockstep']['speedup']:.2f}x >=1.3), "
+        "expert placement dynamic vs static="
+        f"{summary['expert_placement']['expert_placement_speedup']:.2f}x "
+        f"@ s=1.2 (>=1.2, {len(summary['expert_placement']['points'])} skew "
+        "points, tokens conserved), "
         "trajectory deduped, trace covered + metrics snapshot present"
     )
     return 0

@@ -8,11 +8,14 @@ Default mode runs the :mod:`repro.analysis.lint` rule engine over
 runs a small ``hnp`` workload on a 4-device modeled cluster with pipelined
 staging + cross-wave prefetch under ``validate=True`` (the graph verifier
 checks every forced graph pre-dispatch), then feeds the resulting
-``LaunchTicket`` event streams to the happens-before race detector, and
-finally replays the continuous-batching streaming server over a seeded
-bursty trace — its full ticket log through the same checker plus every
-slot-refill edge through ``race/slot-refill-before-complete``.  A clean
-tree must produce zero violations from all passes.
+``LaunchTicket`` event streams to the happens-before race detector, then
+replays the continuous-batching streaming server over a seeded bursty
+trace — its full ticket log through the same checker plus every
+slot-refill edge through ``race/slot-refill-before-complete`` — and
+finally replays a seeded Zipf-skewed expert-routing workload so every
+dynamic-placement migration edge goes through
+``race/expert-migrate-before-drain``.  A clean tree must produce zero
+violations from all passes.
 
 Run:
     PYTHONPATH=src python tools/repro_lint.py [paths...]
@@ -137,6 +140,43 @@ def run_smoke_stream_races() -> int:
         f"repro-lint --smoke-races: streaming serve clean ({ntickets} "
         f"tickets, {len(report.slot_refills)} slot-refill edges, "
         f"{report.completed}/{report.admitted} requests completed)"
+    )
+    return run_smoke_expert_races()
+
+
+def run_smoke_expert_races() -> int:
+    """Replay a Zipf-skewed expert-routing workload and race-check it.
+
+    Drives the dynamic expert-placement policy over seeded skewed router
+    traffic (migrations and replications must fire), then checks the
+    per-lane ticket streams for happens-before and every migration edge
+    for ``race/expert-migrate-before-drain`` — the d2d that moves an
+    expert's weights may not issue while a source-lane launch still
+    reading the handle is in flight."""
+    from repro.analysis.races import (
+        check_expert_migrations,
+        check_ticket_streams,
+    )
+    from repro.core.placement import run_skewed_workload
+
+    result = run_skewed_workload(zipf_s=1.2, seed=0, dynamic=True)
+    violations = check_ticket_streams(result.ticket_streams)
+    violations += check_expert_migrations(result.migration_edges)
+    ntickets = sum(len(ts) for ts in result.ticket_streams.values())
+    if violations:
+        print(format_violations(violations))
+        _dump_flight(violations)
+        print(
+            f"repro-lint --smoke-races: {len(violations)} violation(s) over "
+            f"the skewed expert-placement workload ({ntickets} tickets)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"repro-lint --smoke-races: expert placement clean ({ntickets} "
+        f"tickets, {len(result.migration_edges)} migration edges, "
+        f"{result.migrations} migrations / {result.replications} "
+        "replications under Zipf s=1.2)"
     )
     return 0
 
